@@ -1,0 +1,28 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["time_fn", "csv_row"]
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock seconds per call (jitted fns get compiled in
+    warmup)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,47 @@
+"""Fig. 3: forward-pass wall-clock, Fastmax vs Softmax over N (and D).
+
+Paper result: softmax scales ~N^2, fastmax ~N, break-even N ≈ D^2/4
+(second-order). CPU wall-clock here; same asymptotics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+from repro.core import fastmax_attention, softmax_attention
+
+
+def run(quick: bool = True):
+    rows = []
+    Ns = [256, 512, 1024, 2048] + ([] if quick else [4096, 8192])
+    Ds = [16, 32]
+    B, H = 1, 4
+    rng = np.random.default_rng(0)
+    for d in Ds:
+        for n in Ns:
+            q = jnp.asarray(rng.normal(size=(B, H, n, d)), jnp.float32)
+            k = jnp.asarray(rng.normal(size=(B, H, n, d)), jnp.float32)
+            v = jnp.asarray(rng.normal(size=(B, H, n, d)), jnp.float32)
+            fns = {
+                "softmax": jax.jit(functools.partial(
+                    softmax_attention, causal=True)),
+                "fastmax1": jax.jit(functools.partial(
+                    fastmax_attention, p=1, causal=True, impl="chunked")),
+                "fastmax2": jax.jit(functools.partial(
+                    fastmax_attention, p=2, causal=True, impl="chunked")),
+            }
+            for name, fn in fns.items():
+                t = time_fn(fn, q, k, v, warmup=1, iters=3)
+                rows.append(csv_row(f"fig3/{name}/D{d}/N{n}", t * 1e6,
+                                    f"B{B}xH{H}"))
+    # derived: empirical scaling exponents N->2N (largest pair)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=False):
+        print(r)

@@ -1,0 +1,47 @@
+"""Fig. 6: training loss curves, softmax vs fastmax1/2, by steps AND by
+wall-clock. Paper: per-step parity; per-wallclock fastmax wins at long N."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.configs import get_smoke_config
+from repro.data import SyntheticLM
+from repro.launch.steps import make_train_step, pick_optimizer
+from repro.models import init_model
+
+
+def run(quick: bool = True):
+    rows = []
+    steps = 40 if quick else 150
+    seq = 256 if quick else 1024
+    for backend in ("softmax", "fastmax2", "fastmax1"):
+        cfg = dataclasses.replace(get_smoke_config("qwen2.5-32b"),
+                                  attn_backend=backend)
+        params, _ = init_model(jax.random.PRNGKey(1), cfg)
+        _, opt = pick_optimizer(cfg, 1e6, lr=3e-3, total_steps=steps)
+        opt_state = opt[0](params)
+        step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
+        data = SyntheticLM(cfg.vocab_size, seq, seed=0)
+        t0 = time.perf_counter()
+        losses = []
+        for s in range(steps):
+            batch = jax.tree.map(jnp.asarray, data.batch(s, 4))
+            params, opt_state, m = step_fn(params, opt_state, batch)
+            losses.append(float(m["loss"]))
+        wall = time.perf_counter() - t0
+        rows.append(csv_row(
+            f"fig6/{backend}/N{seq}", wall / steps * 1e6,
+            f"loss_first10={np.mean(losses[:10]):.4f};"
+            f"loss_last10={np.mean(losses[-10:]):.4f};wall_s={wall:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=False):
+        print(r)

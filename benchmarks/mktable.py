@@ -1,0 +1,45 @@
+"""Render the §Roofline markdown table from dry-run JSONs.
+
+Usage: python -m benchmarks.mktable --dir results/dryrun [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    for f in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        cells.append(json.load(open(f)))
+
+    print("| arch | shape | mesh | attn | compute_s | memory_s | "
+          "collective_s | dominant | useful | arg GB/dev | temp GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        if "skipped" in c:
+            print(f"| {c['arch']} | {c['shape']} | — | softmax | — | — | — "
+                  f"| SKIP (quadratic @500k) | — | — | — |")
+            continue
+        if "error" in c:
+            print(f"| {c['arch']} | {c['shape']} | {c.get('mesh','')} | | "
+                  f"FAIL: {c['error'][:60]} | | | | | | |")
+            continue
+        r = c["roofline"]
+        ma = c["memory_analysis"]
+        print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+              f"{c['attn_backend']} | {r['compute_s']:.3e} | "
+              f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+              f"{r['dominant']} | {r.get('useful_flops_ratio', 0):.3f} | "
+              f"{(ma['argument_size'] or 0)/1e9:.2f} | "
+              f"{(ma['temp_size'] or 0)/1e9:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Roofline report: read the dry-run JSONs and print the §Roofline table.
+
+    compute_s    = per-chip matmul FLOPs / 197 TF (bf16)
+    memory_s     = per-chip HBM-traffic proxy / 819 GB/s
+    collective_s = per-chip collective bytes / 50 GB/s per ICI link
+
+plus MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (serve) and the
+useful-compute ratio MODEL_FLOPS / (chips × HLO_FLOPs) — remat/redundancy
+waste shows up here.
+
+Usage: python -m benchmarks.roofline [--dir results/dryrun] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def fmt_row(c):
+    if "skipped" in c:
+        return (f"{c['arch']:18s} {c['shape']:12s} "
+                f"SKIP ({c['skipped'][:60]}...)")
+    if "error" in c:
+        return (f"{c['arch']:18s} {c['shape']:12s} "
+                f"FAIL {c['error'][:80]}")
+    r = c["roofline"]
+    return (f"{c['arch']:18s} {c['shape']:12s} {c['mesh']:8s} "
+            f"{c['attn_backend']:9s} "
+            f"comp={r['compute_s']:9.3e} mem={r['memory_s']:9.3e} "
+            f"coll={r['collective_s']:9.3e} dom={r['dominant']:10s} "
+            f"useful={r.get('useful_flops_ratio', 0):6.3f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    cells = load(args.dir)
+    if args.csv:
+        print("arch,shape,mesh,attn,compute_s,memory_s,collective_s,"
+              "dominant,useful_ratio,status")
+        for c in cells:
+            if "roofline" in c:
+                r = c["roofline"]
+                print(f"{c['arch']},{c['shape']},{c['mesh']},"
+                      f"{c['attn_backend']},{r['compute_s']:.4e},"
+                      f"{r['memory_s']:.4e},{r['collective_s']:.4e},"
+                      f"{r['dominant']},"
+                      f"{r.get('useful_flops_ratio', 0):.4f},ok")
+            else:
+                status = "skip" if "skipped" in c else "fail"
+                print(f"{c['arch']},{c['shape']},{c.get('mesh','')},,,,,,,"
+                      f"{status}")
+        return
+    for c in cells:
+        print(fmt_row(c))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Quick mode by default (CPU);
+``--full`` runs the paper-scale variants of each.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig3,table2,fig6,fig2,"
+                         "table1,fig4")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (fig2_dropout, fig3_scaling, fig4_attnmap,
+                            fig6_loss, table1_lra_lite, table2_throughput)
+
+    suites = {
+        "fig3": fig3_scaling.run,
+        "table2": table2_throughput.run,
+        "fig6": fig6_loss.run,
+        "fig2": fig2_dropout.run,
+        "table1": table1_lra_lite.run,
+        "fig4": fig4_attnmap.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            for row in fn(quick=quick):
+                print(row, flush=True)
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+        print(f"{name}/elapsed,{(time.time() - t0) * 1e6:.0f},",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Table 1: LRA-lite — expressivity parity of fastmax vs softmax.
+
+The real LRA is a multi-GPU-day benchmark; this is a faithful-in-kind,
+CPU-scale stand-in with three of its task archetypes:
+
+  listops   — hierarchical ops over digit tokens (max/min/sum-mod nesting)
+  text      — byte-level classification by long-range motif co-occurrence
+  image     — flattened pixel-grid classification (orientation of bars)
+
+Same tiny transformer per backend; report accuracy per task. The paper's
+claim to validate: fastmax2 ~ softmax (within noise), fastmax1 slightly
+behind (Table 1 pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.configs import get_smoke_config
+from repro.launch.steps import pick_optimizer
+from repro.models import init_model
+from repro.models.transformer import forward_lm
+
+
+# ---------------------------------------------------------------------------
+# task generators (deterministic)
+# ---------------------------------------------------------------------------
+
+
+def gen_listops(rng, n, seq):
+    """Tokens 0-9 digits; 10=MAX 11=MIN 12=SUMMOD markers placed at random
+    segment starts; label = value of the expression tree, 10-way."""
+    toks = rng.integers(0, 10, (n, seq))
+    ops = rng.integers(10, 13, (n, 4))
+    pos = np.sort(rng.integers(0, seq, (n, 4)), axis=1)
+    for i in range(n):
+        toks[i, pos[i]] = ops[i]
+    # label: evaluate segments left->right
+    labels = np.zeros(n, np.int64)
+    for i in range(n):
+        vals = []
+        segs = np.split(toks[i], pos[i])
+        for seg in segs[1:]:
+            digits = seg[1:][seg[1:] < 10]
+            if len(digits) == 0:
+                continue
+            vals.append(int(digits.max()))
+        labels[i] = (sum(vals) % 10) if vals else 0
+    return toks.astype(np.int32), labels.astype(np.int32)
+
+
+def gen_text(rng, n, seq, vocab=64):
+    """Label = whether motif A appears before motif B (long-range order)."""
+    toks = rng.integers(4, vocab, (n, seq))
+    labels = rng.integers(0, 2, n)
+    for i in range(n):
+        pa, pb = sorted(rng.choice(seq - 2, 2, replace=False))
+        if labels[i] == 0:
+            pa, pb = pb, pa
+        toks[i, pa] = 0
+        toks[i, pa + 1] = 1
+        toks[i, pb] = 2
+        toks[i, pb + 1] = 3
+    return toks.astype(np.int32), labels.astype(np.int32)
+
+
+def gen_image(rng, n, side=16):
+    """Flattened binary grid; label = bars orientation (H vs V)."""
+    labels = rng.integers(0, 2, n)
+    imgs = np.zeros((n, side, side), np.int64)
+    for i in range(n):
+        stripes = rng.integers(2, side // 2)
+        idx = rng.choice(side, stripes, replace=False)
+        if labels[i] == 0:
+            imgs[i, idx, :] = 1
+        else:
+            imgs[i, :, idx] = 1
+    return imgs.reshape(n, side * side).astype(np.int32) + 1, \
+        labels.astype(np.int32)
+
+
+TASKS = {
+    "listops": lambda rng, n: gen_listops(rng, n, 128),
+    "text": lambda rng, n: gen_text(rng, n, 256),
+    "image": lambda rng, n: gen_image(rng, n, 16),
+}
+
+
+def _train_classifier(backend, xtr, ytr, xte, yte, n_classes, steps, seed=0):
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen2.5-32b"), attn_backend=backend,
+        vocab_size=int(xtr.max()) + 1, n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, head_dim=16, d_ff=128, chunk_size=64)
+    params, _ = init_model(jax.random.PRNGKey(seed), cfg)
+    head = jnp.zeros((cfg.d_model, n_classes))
+
+    def logits_fn(p, head, x):
+        hidden, _ = forward_lm(p, x, cfg, causal=False, return_hidden=True)
+        return hidden.mean(axis=1) @ head
+
+    def loss_fn(p, head, x, y):
+        logp = jax.nn.log_softmax(logits_fn(p, head, x))
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], 1))
+
+    from repro.optim import make_optimizer, warmup_cosine
+    init_o, upd = make_optimizer("adamw", warmup_cosine(1e-3, 20, steps),
+                                 weight_decay=0.01)
+    all_params = {"m": params, "h": head}
+    opt = init_o(all_params)
+
+    @jax.jit
+    def step(ap, opt, x, y):
+        loss, g = jax.value_and_grad(
+            lambda a: loss_fn(a["m"], a["h"], x, y))(ap)
+        ap, opt = upd(g, opt, ap)
+        return ap, opt, loss
+
+    bs = 16
+    ntr = xtr.shape[0]
+    for s in range(steps):
+        i0 = (s * bs) % max(1, ntr - bs)
+        ap_x, ap_y = xtr[i0:i0 + bs], ytr[i0:i0 + bs]
+        all_params, opt, loss = step(all_params, opt, ap_x, ap_y)
+
+    pred = jnp.argmax(logits_fn(all_params["m"], all_params["h"], xte), -1)
+    return float(jnp.mean(pred == yte))
+
+
+def run(quick: bool = True):
+    rows = []
+    rng = np.random.default_rng(0)
+    n_train = 256 if quick else 2048
+    steps = 200 if quick else 600
+    tasks = {"text": TASKS["text"], "image": TASKS["image"]} if quick \
+        else TASKS
+    for task, gen in tasks.items():
+        xtr, ytr = gen(rng, n_train)
+        xte, yte = gen(rng, 256)
+        n_classes = int(max(ytr.max(), yte.max())) + 1
+        xtr, ytr = jnp.asarray(xtr), jnp.asarray(ytr)
+        xte, yte = jnp.asarray(xte), jnp.asarray(yte)
+        for backend in ("softmax", "fastmax2", "fastmax1"):
+            acc = _train_classifier(backend, xtr, ytr, xte, yte,
+                                    n_classes, steps)
+            rows.append(csv_row(f"table1/{task}/{backend}", 0.0,
+                                f"test_acc={acc:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=False):
+        print(r)

@@ -1,0 +1,60 @@
+"""Table 2: training steps/sec, Fastmax vs Softmax at the LRA task lengths.
+
+Paper: D=32 per head; break-even for fastmax2 at N=1024; fastmax1 much
+faster everywhere. Reduced model width for CPU, same sequence lengths.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+from repro.configs import get_smoke_config
+from repro.launch.steps import make_train_step, pick_optimizer
+from repro.models import init_model
+
+
+TASK_LENGTHS = {"listops": 2000, "text": 4000, "image": 1000,
+                "pathfinder": 1000}
+
+
+def run(quick: bool = True):
+    rows = []
+    tasks = {"listops": 2000, "image": 1000} if quick else TASK_LENGTHS
+    for task, n in tasks.items():
+        for backend in ("softmax", "fastmax2", "fastmax1"):
+            cfg = dataclasses.replace(
+                get_smoke_config("qwen2.5-32b"),
+                attn_backend=backend, n_layers=2, d_model=64, n_heads=2,
+                n_kv_heads=2, head_dim=32, d_ff=128, vocab_size=256,
+                chunk_size=128)
+            params, _ = init_model(jax.random.PRNGKey(0), cfg)
+            _, opt = pick_optimizer(cfg, 1e6)
+            opt_state = opt[0](params)
+            # no donation: the benchmark re-times the same buffers
+            step = jax.jit(make_train_step(cfg, opt))
+            rng = np.random.default_rng(0)
+            batch = {
+                "tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (2, n)), jnp.int32),
+                "targets": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (2, n)), jnp.int32),
+            }
+
+            def stepper(p, o, b):
+                p, o, m = step(p, o, b)
+                return m["loss"]
+
+            t = time_fn(lambda: stepper(params, opt_state, batch),
+                        warmup=1, iters=3)
+            rows.append(csv_row(f"table2/{backend}/{task}/N{n}", t * 1e6,
+                                f"steps_per_s={1.0 / t:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=False):
+        print(r)

@@ -1,0 +1,34 @@
+"""Serving example: batched requests, prefill + streaming decode.
+
+Highlights the fastmax serving property: per-sequence state is the moment
+tuple — the same size whether the prompt was 100 tokens or 100k tokens.
+
+Run: PYTHONPATH=src python examples/serve.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import generate
+from repro.models import init_decode_state, init_model
+from repro.models.param import tree_bytes
+
+cfg = get_smoke_config("qwen2.5-32b")
+params, _ = init_model(jax.random.PRNGKey(0), cfg)
+
+rng = np.random.default_rng(0)
+BATCH, GEN = 4, 24
+for prompt_len in (32, 256):
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (BATCH, prompt_len)), jnp.int32)
+    state = init_decode_state(cfg, BATCH, prompt_len + GEN)
+    t0 = time.monotonic()
+    toks = generate(params, cfg, prompts, GEN)
+    dt = time.monotonic() - t0
+    print(f"prompt={prompt_len:5d}: generated {toks.shape[1]} tok/seq x "
+          f"{BATCH} seqs in {dt:.2f}s; decode state "
+          f"{tree_bytes(state)/1e6:.2f} MB (constant in prompt length)")
+print("sample tokens:", np.asarray(toks[0][:12]))

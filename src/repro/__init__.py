@@ -1,0 +1,2 @@
+"""repro — FAST (Factorizable Attention) production framework in JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+"""Checkpointing: sharded, atomic, async, mesh-agnostic (elastic restore)."""
+from repro.ckpt.checkpoint import (  # noqa: F401
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)

@@ -1,0 +1,183 @@
+"""Self-contained distributed checkpointing (no orbax).
+
+Layout: one directory per step —
+    ckpt_dir/step_000100/
+        manifest.json           tree structure, shapes, dtypes, step
+        arrays/<leaf-id>.npy    one file per leaf (host-gathered)
+    ckpt_dir/LATEST            atomic pointer (written last)
+
+Properties needed at scale:
+  * ATOMIC: data is written into a tmp dir and renamed; LATEST is updated
+    only after the rename — a preempted save can never corrupt the
+    previous checkpoint.
+  * ASYNC: `CheckpointManager.save(..., block=False)` snapshots to host
+    memory synchronously (cheap) and writes in a background thread so the
+    train loop keeps stepping.
+  * MESH-AGNOSTIC / ELASTIC: leaves are stored unsharded; restore reshards
+    onto whatever mesh/sharding the new job uses (device count may differ —
+    elastic data-axis rescale).
+  * SELF-DESCRIBING: manifest carries the pytree structure; restore does
+    not need the model code to enumerate leaves in the same order.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+
+# numpy can't persist extended dtypes (bf16, fp8) natively — store as a
+# same-width uint view and record the logical dtype in the manifest
+_EXT_DTYPE_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                   "float8_e5m2": np.uint8}
+
+
+def _to_saveable(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _EXT_DTYPE_VIEW:
+        return arr.view(_EXT_DTYPE_VIEW[name]), name
+    return arr, name
+
+
+def _from_saved(arr: np.ndarray, name: str) -> np.ndarray:
+    if name in _EXT_DTYPE_VIEW:
+        import ml_dtypes
+        return arr.view(getattr(ml_dtypes, name))
+    return arr
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                 for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+    return leaves, paths, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> str:
+    """Synchronous atomic save. Returns the final checkpoint path."""
+    leaves, paths, treedef = _flatten(tree)
+    tag = f"step_{step:08d}"
+    tmp = os.path.join(ckpt_dir, f".tmp_{tag}")
+    final = os.path.join(ckpt_dir, tag)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(os.path.join(tmp, "arrays"), exist_ok=True)
+
+    manifest = {"step": step, "extra": extra or {}, "leaves": []}
+    for i, (leaf, path) in enumerate(zip(leaves, paths)):
+        arr = np.asarray(jax.device_get(leaf))
+        saveable, dtype_name = _to_saveable(arr)
+        fn = f"{i:05d}.npy"
+        np.save(os.path.join(tmp, "arrays", fn), saveable)
+        manifest["leaves"].append(
+            {"path": path, "file": fn, "shape": list(arr.shape),
+             "dtype": dtype_name})
+    manifest["treedef"] = str(treedef)  # informational; restore uses `like`
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    with open(os.path.join(ckpt_dir, ".LATEST_tmp"), "w") as f:
+        f.write(tag)
+    os.replace(os.path.join(ckpt_dir, ".LATEST_tmp"),
+               os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    tag = open(ptr).read().strip()
+    if not os.path.isdir(os.path.join(ckpt_dir, tag)):
+        return None
+    return int(tag.split("_")[1])
+
+
+def load_checkpoint(ckpt_dir: str, like: Any, *, step: Optional[int] = None,
+                    shardings: Any = None):
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). `shardings`: optional matching tree of NamedSharding
+    — leaves are placed (and thereby resharded) onto it: elastic restore.
+
+    Returns (tree, step, extra).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+
+    _, paths, treedef = _flatten(like)
+    by_path = {m["path"]: m for m in manifest["leaves"]}
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(paths))
+    out = []
+    for path, sh in zip(paths, shard_leaves):
+        m = by_path[path]
+        arr = _from_saved(np.load(os.path.join(d, "arrays", m["file"])),
+                          m["dtype"])
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return (jax.tree_util.tree_unflatten(treedef, out), step,
+            manifest.get("extra", {}))
+
+
+class CheckpointManager:
+    """Async save + retention. Snapshot is taken synchronously (device_get),
+    disk write happens on a background thread; `wait()` joins in-flight
+    writes (call before exit / next save)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        os.makedirs(ckpt_dir, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             block: bool = True):
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self.wait()
+
+        def work():
+            save_checkpoint(self.dir, step, host_tree, extra)
+            self._gc()
+
+        if block:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, like, *, shardings=None, step=None):
+        return load_checkpoint(self.dir, like, step=step,
+                               shardings=shardings)
+
+    def latest_step(self):
+        return latest_step(self.dir)
+
+    def _gc(self):
+        tags = sorted(t for t in os.listdir(self.dir)
+                      if t.startswith("step_"))
+        for t in tags[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, t), ignore_errors=True)

@@ -1,0 +1,78 @@
+"""Assigned-architecture registry: one module per arch + shape table.
+
+Every config is exact per the assignment (10 archs x 4 shapes = 40 cells).
+`get_config(name, **overrides)` returns the FULL config;
+`get_smoke_config(name)` returns the reduced same-family config used by the
+per-arch CPU smoke tests (full configs are only exercised via the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import NamedTuple
+
+from repro.models.transformer import ModelConfig
+
+ARCH_NAMES = [
+    "qwen2_5_32b",
+    "granite_20b",
+    "qwen3_1_7b",
+    "llama3_405b",
+    "whisper_small",
+    "deepseek_v2_236b",
+    "kimi_k2_1t",
+    "chameleon_34b",
+    "xlstm_1_3b",
+    "jamba_52b",
+]
+
+# public ids used on the CLI (--arch) mapped to module names
+ARCH_IDS = {
+    "qwen2.5-32b": "qwen2_5_32b",
+    "granite-20b": "granite_20b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "llama3-405b": "llama3_405b",
+    "whisper-small": "whisper_small",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t",
+    "chameleon-34b": "chameleon_34b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "jamba-v0.1-52b": "jamba_52b",
+}
+
+
+class ShapeSpec(NamedTuple):
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec(4096, 256, "train"),
+    "prefill_32k": ShapeSpec(32768, 32, "prefill"),
+    "decode_32k": ShapeSpec(32768, 128, "decode"),
+    "long_500k": ShapeSpec(524288, 1, "decode"),
+}
+
+
+def _module(name: str):
+    mod_name = ARCH_IDS.get(name, name)
+    return importlib.import_module(f"repro.configs.{mod_name}")
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    cfg = _module(name).config()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke_config(name: str, **overrides) -> ModelConfig:
+    cfg = _module(name).smoke_config()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def all_arch_ids():
+    return list(ARCH_IDS.keys())

@@ -1,0 +1,18 @@
+"""Core: the paper's contribution — Fastmax factorizable attention."""
+from repro.core.fastmax import (  # noqa: F401
+    FastmaxConfig,
+    Moments,
+    compute_moments,
+    fastmax_attention,
+    fastmax_causal_chunked,
+    fastmax_noncausal,
+    fastmax_rowwise,
+    normalize_qk,
+    poly_kernel,
+)
+from repro.core.decode_state import (  # noqa: F401
+    fastmax_decode_step,
+    fastmax_prefill,
+    init_fastmax_state,
+)
+from repro.core.softmax import softmax_attention  # noqa: F401

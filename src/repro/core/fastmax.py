@@ -1,0 +1,669 @@
+"""FAST / Fastmax attention — production JAX implementation.
+
+The paper's contribution (Gerami et al., 2024): replace softmax's exp(q.k)
+with a truncated-Taylor polynomial kernel f(x) = sum_{l<=p} x^l/l! applied to
+statistically-normalized q, k. Because f is polynomial, the score O = A V
+factorizes through key/value *moments* and costs O(N D^{p+1}) instead of
+O(N^2 D).
+
+Implementations provided (all numerically equivalent; validated against
+`repro.core.ref`):
+
+* ``impl='oracle'``    — O(N^2) reference (tests only).
+* ``impl='rowwise'``   — the paper's own schedule: per-row prefix moments
+                         (causal) / global moments (noncausal), explicit
+                         phi-features. Supports the paper's three dropout
+                         variants (Fig. 2). Memory O(N D^p) when causal —
+                         kept for fidelity + small-model training.
+* ``impl='chunked'``   — TPU-native chunked prefix-scan (DESIGN.md §2):
+                         O(D^{p+1}) carry, MXU-shaped matmuls, optional
+                         memory-reduced custom VJP (paper §2.5) that
+                         reconstructs the scan carry *reversibly* in the
+                         backward pass instead of storing it.
+* ``impl='kernel'``    — Pallas TPU kernel (see `repro.kernels`).
+
+Shape/GQA convention: q is [B, Hq, N, D]; k, v are [B, Hkv, N, D] with
+Hq % Hkv == 0. Moments are computed once per kv-head and shared across the
+query group (a beyond-paper efficiency the GPU reference code lacks).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ref import (
+    fastmax_attention_ref,
+    normalize_qk,
+    poly_kernel,
+)
+
+__all__ = [
+    "FastmaxConfig",
+    "Moments",
+    "fastmax_attention",
+    "fastmax_noncausal",
+    "fastmax_causal_chunked",
+    "fastmax_rowwise",
+    "compute_moments",
+    "normalize_qk",
+    "poly_kernel",
+]
+
+
+class FastmaxConfig(NamedTuple):
+    """Static configuration for a fastmax call."""
+
+    p: int = 2                 # polynomial order (paper: 1 or 2)
+    causal: bool = False
+    normalize: bool = True     # paper Eqs. 5-6
+    chunk_size: int = 128      # chunk length for the scan schedule
+    denom_eps: float = 1e-6    # guards p=1's sign-indefinite denominator
+    custom_grad: bool = True   # paper §2.5 memory-reduced backward
+    accum_dtype: jnp.dtype = jnp.float32
+
+
+class Moments(NamedTuple):
+    """Factorized key/value moments (paper Eqs. 28-29).
+
+    Shapes (per batch x kv-head):
+      m0: [..., Dv]        sum_n w_n v_n
+      m1: [..., D, Dv]     sum_n w_n k_n v_n^T
+      m2: [..., D, D, Dv]  sum_n w_n (k_n k_n^T) v_n   (p=2 only; zeros if p=1)
+      g0: [...]            sum_n w_n
+      g1: [..., D]         sum_n w_n k_n
+      g2: [..., D, D]      sum_n w_n k_n k_n^T         (p=2 only)
+    """
+
+    m0: jnp.ndarray
+    m1: jnp.ndarray
+    m2: jnp.ndarray
+    g0: jnp.ndarray
+    g1: jnp.ndarray
+    g2: jnp.ndarray
+
+    def __add__(self, other: "Moments") -> "Moments":
+        return Moments(*(a + b for a, b in zip(self, other)))
+
+    def __sub__(self, other: "Moments") -> "Moments":
+        return Moments(*(a - b for a, b in zip(self, other)))
+
+
+def _f32(x):
+    """Promote to at-least-float32 (bf16 -> f32; f64 stays f64)."""
+    return x.astype(jnp.promote_types(x.dtype, jnp.float32))
+
+
+def _acc_dtype(x):
+    return jnp.promote_types(x.dtype, jnp.float32)
+
+
+def _pick_bm(d: int) -> int:
+    """m-block size: largest divisor of d with bm*d <= 2048.
+
+    The degree-2 terms are evaluated in m-blocks so no intermediate larger
+    than [..., n, bm*d] is ever materialized (the naive einsum builds
+    [..., n, D, Dv] — gigabytes at production shapes)."""
+    best = 1
+    for bm in range(1, d + 1):
+        if d % bm == 0 and bm * d <= 2048:
+            best = bm
+    return best
+
+
+def compute_moments(
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    p: int,
+    kv_mask: Optional[jnp.ndarray] = None,
+    accum_dtype=None,
+) -> Moments:
+    """Moments of (k, v) over the token axis (axis=-2). k:[...,N,D] v:[...,N,Dv].
+
+    `kv_mask` ([..., N], 1=valid) zeroes the contribution of padding tokens in
+    BOTH numerator and denominator (exact: a masked key contributes nothing).
+    """
+    d = k.shape[-1]
+    if accum_dtype is None:
+        accum_dtype = _acc_dtype(k)
+    if kv_mask is not None:
+        w = kv_mask.astype(accum_dtype)
+        kw = k * w[..., None]
+        vw = v * w[..., None]
+        g0 = jnp.sum(w, axis=-1)
+    else:
+        kw, vw = k, v
+        g0 = jnp.full(k.shape[:-2], float(k.shape[-2]), dtype=accum_dtype)
+    m0 = jnp.sum(vw, axis=-2, dtype=accum_dtype)
+    m1 = jnp.einsum("...nm,...nj->...mj", kw, v, preferred_element_type=accum_dtype)
+    g1 = jnp.sum(kw, axis=-2, dtype=accum_dtype)
+    if p >= 2:
+        # m-blocked: never materialize [..., N, D, D]
+        bm = _pick_bm(d)
+        dv = v.shape[-1]
+        parts = []
+        for s in range(0, d, bm):
+            t = kw[..., :, s:s + bm, None] * k[..., :, None, :]
+            t = t.reshape(*k.shape[:-1], bm * d)           # [..., N, bm*D]
+            w2 = jnp.einsum("...nf,...nj->...fj", t, v,
+                            preferred_element_type=accum_dtype)
+            parts.append(w2.reshape(*k.shape[:-2], bm, d, dv))
+        m2 = jnp.concatenate(parts, axis=-3)
+        g2 = jnp.einsum("...nm,...nl->...ml", kw, k, preferred_element_type=accum_dtype)
+    else:
+        bshape = k.shape[:-2]
+        m2 = jnp.zeros(bshape + (d, d, v.shape[-1]), accum_dtype)
+        g2 = jnp.zeros(bshape + (d, d), accum_dtype)
+    return Moments(m0, m1, m2, _f32(g0), g1, g2)
+
+
+def combine_with_queries(q: jnp.ndarray, mom: Moments, *, p: int):
+    """Per-query contraction with moments (paper Eqs. 26-27).
+
+    q: [..., n, D]; moments broadcastable against q's batch dims.
+    Returns (num [..., n, Dv], den [..., n]).
+    """
+    qf = _f32(q)
+    acc = qf.dtype
+    num = mom.m0[..., None, :] + jnp.einsum(
+        "...nm,...mj->...nj", qf, mom.m1, preferred_element_type=acc
+    )
+    den = mom.g0[..., None] + jnp.einsum(
+        "...nm,...m->...n", qf, mom.g1, preferred_element_type=acc
+    )
+    if p >= 2:
+        d = qf.shape[-1]
+        dv = mom.m2.shape[-1]
+        bm = _pick_bm(d)
+        num2 = None
+        for s in range(0, d, bm):
+            y = qf[..., :, s:s + bm, None] * qf[..., :, None, :]
+            y = y.reshape(*qf.shape[:-1], bm * d)          # [..., n, bm*D]
+            z = mom.m2[..., s:s + bm, :, :]
+            z = z.reshape(*mom.m2.shape[:-3], bm * d, dv)  # [..., bm*D, Dv]
+            c = jnp.einsum("...nf,...fj->...nj", y, z,
+                           preferred_element_type=acc)
+            num2 = c if num2 is None else num2 + c
+        num = num + 0.5 * num2
+        den = den + 0.5 * jnp.einsum(
+            "...nm,...ml,...nl->...n", qf, mom.g2, qf,
+            preferred_element_type=acc,
+        )
+    return num, den
+
+
+# ---------------------------------------------------------------------------
+# GQA plumbing
+# ---------------------------------------------------------------------------
+
+
+def _group_queries(q: jnp.ndarray, h_kv: int) -> jnp.ndarray:
+    """[B, Hq, N, D] -> [B, Hkv, G, N, D]."""
+    b, hq, n, d = q.shape
+    if hq % h_kv != 0:
+        raise ValueError(f"Hq={hq} not divisible by Hkv={h_kv}")
+    return q.reshape(b, h_kv, hq // h_kv, n, d)
+
+
+def _ungroup(o: jnp.ndarray) -> jnp.ndarray:
+    """[B, Hkv, G, N, Dv] -> [B, Hq, N, Dv]."""
+    b, hkv, g, n, dv = o.shape
+    return o.reshape(b, hkv * g, n, dv)
+
+
+# ---------------------------------------------------------------------------
+# Noncausal factorized path
+# ---------------------------------------------------------------------------
+
+
+def compute_moments_chunked(
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    p: int,
+    kv_mask: Optional[jnp.ndarray] = None,
+    chunk_size: int = 512,
+) -> Moments:
+    """Full-sequence moments accumulated over N-chunks — peak memory
+    O(chunk * bm * D) instead of O(N * bm * D)."""
+    b, hkv, m, d = k.shape
+    if m <= chunk_size:
+        return compute_moments(k, v, p=p, kv_mask=kv_mask)
+    nc = -(-m // chunk_size)
+    pad = nc * chunk_size - m
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    if kv_mask is None:
+        mask = jnp.ones((b, hkv, m), dtype=jnp.float32)
+    else:
+        mask = kv_mask.astype(jnp.float32)
+    maskp = jnp.pad(mask, ((0, 0), (0, 0), (0, pad)))
+    kc = jnp.moveaxis(kp.reshape(b, hkv, nc, chunk_size, d), 2, 0)
+    vc = jnp.moveaxis(vp.reshape(b, hkv, nc, chunk_size, -1), 2, 0)
+    mc = jnp.moveaxis(maskp.reshape(b, hkv, nc, chunk_size), 2, 0)
+
+    def body(acc, xs):
+        kc_i, vc_i, mc_i = xs
+        return acc + compute_moments(kc_i, vc_i, p=p, kv_mask=mc_i), None
+
+    zero = jax.tree.map(
+        jnp.zeros_like, compute_moments(kc[0], vc[0], p=p, kv_mask=mc[0])
+    )
+    mom, _ = jax.lax.scan(body, zero, (kc, vc, mc))
+    return mom
+
+
+def _constrain_moments_j(mom: Moments) -> Moments:
+    """Feature-TP (noncausal/global moments): shard the value (Dv) dim of
+    the moment tensors over 'model' — the phi2 combine then splits TP-ways
+    with no extra collectives (beyond the row-parallel wo psum). Beyond-
+    paper: Megatron row-parallelism on the factorized-attention feature
+    dim."""
+    from repro.sharding.rules import maybe_constraint
+
+    def j_shard(x):
+        if x.ndim < 3:
+            return x
+        return maybe_constraint(x, *((None,) * (x.ndim - 1) + ("model",)))
+
+    return Moments(j_shard(mom.m0), j_shard(mom.m1), j_shard(mom.m2),
+                   mom.g0, mom.g1, mom.g2)
+
+
+def _token_shard(x):
+    """Shard the token axis (-2) of a chunk over 'model': the moment UPDATE
+    (a contraction over tokens) then computes 1/TP of the sum per device and
+    XLA inserts one psum of the (small, O(D^2 Dv)) moment delta per chunk.
+    This is how the update parallelizes when kv-heads < TP degree (GQA/MQA:
+    kv moments are otherwise replicated TP-ways). Beyond-paper."""
+    from repro.sharding.rules import maybe_constraint
+    return maybe_constraint(
+        x, *((None,) * (x.ndim - 2) + ("model", None)))
+
+
+def _combine_grouped(qg, mom: Moments, *, p: int):
+    """combine_with_queries with the G axis FOLDED into the token axis —
+    never builds a broadcast [.., Hkv, G, D, D, Dv] view of the moments
+    (XLA reshapes of broadcasts force full rematerialization)."""
+    b, hkv, g, n, d = qg.shape
+    qf = qg.reshape(b, hkv, g * n, d)
+    num, den = combine_with_queries(qf, mom, p=p)
+    return (num.reshape(b, hkv, g, n, -1), den.reshape(b, hkv, g, n))
+
+
+def fastmax_noncausal(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    p: int = 2,
+    kv_mask: Optional[jnp.ndarray] = None,
+    denom_eps: float = 1e-6,
+    chunk_size: int = 512,
+    feature_shard: bool = False,
+) -> jnp.ndarray:
+    """Bidirectional fastmax. q:[B,Hq,N,D] k,v:[B,Hkv,M,*]. O(N D^{p+1})."""
+    b, hkv, m, d = k.shape
+    out_dtype = q.dtype
+    mom = compute_moments_chunked(k, v, p=p, kv_mask=kv_mask,
+                                  chunk_size=chunk_size)
+    if feature_shard:
+        mom = _constrain_moments_j(mom)
+    qg = _group_queries(q, hkv)
+    num, den = _combine_grouped(qg, mom, p=p)
+    o = num / (den + denom_eps)[..., None]
+    return _ungroup(o).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Causal chunked scan (TPU-native schedule; DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+
+def _intra_chunk(qg, kc, vc, *, p, wc):
+    """Exact within-chunk causal attention terms via the (small) B x B matrix.
+
+    qg: [B,Hkv,G,c,D], kc: [B,Hkv,c,D], vc: [B,Hkv,c,Dv], wc: [B,Hkv,c].
+    Returns (num [B,Hkv,G,c,Dv], den [B,Hkv,G,c]).
+    """
+    c = kc.shape[-2]
+    acc = _acc_dtype(qg)
+    s = jnp.einsum("...gnd,...md->...gnm", _f32(qg), _f32(kc),
+                   preferred_element_type=acc)
+    fs = poly_kernel(s, p)
+    tri = jnp.tril(jnp.ones((c, c), dtype=acc))
+    fs = fs * tri
+    if wc is not None:
+        fs = fs * wc[..., None, None, :].astype(acc)
+    num = jnp.einsum("...gnm,...mj->...gnj", fs, _f32(vc),
+                     preferred_element_type=acc)
+    den = jnp.sum(fs, axis=-1)
+    return num, den
+
+
+def _causal_scan(q, k, v, *, p, chunk_size, kv_mask, denom_eps,
+                 feature_shard=False):
+    """Chunked causal fastmax. Returns (o, final_moments).
+
+    Carry = moments of all *previous* chunks; each chunk adds an exact
+    intra-chunk term computed through the f(QK^T) block (same numbers as the
+    factorized form, cheaper for the diagonal).
+    """
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    dv = v.shape[-1]
+    cs = min(chunk_size, n)
+    nc = -(-n // cs)
+    pad = nc * cs - n
+
+    if kv_mask is None:
+        w = jnp.ones((b, hkv, n), dtype=jnp.float32)
+    else:
+        w = kv_mask.astype(jnp.float32)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, pad)))
+
+    qg = _group_queries(qp, hkv)  # [B,Hkv,G,Nc*cs,D]
+    g = qg.shape[2]
+    # chunk-major layout for scan
+    qs = jnp.moveaxis(qg.reshape(b, hkv, g, nc, cs, d), 3, 0)
+    ks = jnp.moveaxis(kp.reshape(b, hkv, nc, cs, d), 2, 0)
+    vs = jnp.moveaxis(vp.reshape(b, hkv, nc, cs, dv), 2, 0)
+    ws = jnp.moveaxis(wp.reshape(b, hkv, nc, cs), 2, 0)
+
+    zero = jax.tree.map(
+        jnp.zeros_like, compute_moments(ks[0], vs[0], p=p, kv_mask=ws[0])
+    )
+
+    def body(carry: Moments, xs):
+        qc, kc, vc, wc = xs
+        num_i, den_i = _combine_grouped(qc, carry, p=p)
+        num_a, den_a = _intra_chunk(qc, kc, vc, p=p, wc=wc)
+        o = (num_i + num_a) / (den_i + den_a + denom_eps)[..., None]
+        new_carry = carry + compute_moments(kc, vc, p=p, kv_mask=wc)
+        if feature_shard:
+            new_carry = _constrain_moments_j(new_carry)
+        return new_carry, o
+
+    final, os_ = jax.lax.scan(body, zero, (qs, ks, vs, ws))
+    o = jnp.moveaxis(os_, 0, 3).reshape(b, hkv, g, nc * cs, dv)
+    o = _ungroup(o)[:, :, :n]
+    return o, final
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+)
+def _causal_scan_cg(q, k, v, p, chunk_size, denom_eps, feature_shard=False):
+    """Causal fastmax with the paper §2.5 memory-reduced custom gradient.
+
+    Forward stores only (q, k, v, final moments): the backward pass
+    reconstructs the scan carry at each chunk *reversibly* (moments are sums:
+    carry_before = carry_after - delta_chunk) and re-applies autodiff to the
+    chunk body. Memory O(N D) instead of O(N D^p) — the bound derived in
+    paper §2.5.
+    """
+    o, _ = _causal_scan(q, k, v, p=p, chunk_size=chunk_size, kv_mask=None,
+                        denom_eps=denom_eps, feature_shard=feature_shard)
+    return o
+
+
+def _causal_scan_cg_fwd(q, k, v, p, chunk_size, denom_eps,
+                        feature_shard=False):
+    o, final = _causal_scan(q, k, v, p=p, chunk_size=chunk_size, kv_mask=None,
+                            denom_eps=denom_eps, feature_shard=feature_shard)
+    return o, (q, k, v, final)
+
+
+def _causal_scan_cg_bwd(p, chunk_size, denom_eps, feature_shard, res, do):
+    q, k, v, final = res
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    dv = v.shape[-1]
+    cs = min(chunk_size, n)
+    nc = -(-n // cs)
+    pad = nc * cs - n
+
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    dop = jnp.pad(do, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    # same validity mask as the forward scan: zeros on padded tail tokens
+    w = jnp.pad(jnp.ones((b, hkv, n), dtype=jnp.float32),
+                ((0, 0), (0, 0), (0, pad)))
+
+    qg = _group_queries(qp, hkv)
+    g = qg.shape[2]
+    qs = jnp.moveaxis(qg.reshape(b, hkv, g, nc, cs, d), 3, 0)
+    ks = jnp.moveaxis(kp.reshape(b, hkv, nc, cs, d), 2, 0)
+    vs = jnp.moveaxis(vp.reshape(b, hkv, nc, cs, dv), 2, 0)
+    ws = jnp.moveaxis(w.reshape(b, hkv, nc, cs), 2, 0)
+    dog = _group_queries(dop, hkv)
+    dos = jnp.moveaxis(dog.reshape(b, hkv, g, nc, cs, dv), 3, 0)
+
+    def chunk_fwd(carry: Moments, qc, kc, vc, wc):
+        num_i, den_i = _combine_grouped(qc, carry, p=p)
+        num_a, den_a = _intra_chunk(qc, kc, vc, p=p, wc=wc)
+        return (num_i + num_a) / (den_i + den_a + denom_eps)[..., None]
+
+    def rev_body(state, xs):
+        carry_after, gcarry = state
+        qc, kc, vc, wc, doc = xs
+        delta = compute_moments(kc, vc, p=p, kv_mask=wc)
+        carry_before = carry_after - delta
+
+        def f(carry, qc_, kc_, vc_):
+            o = chunk_fwd(carry, qc_, kc_, vc_, wc)
+            new_carry = carry + compute_moments(kc_, vc_, p=p, kv_mask=wc)
+            if feature_shard:
+                new_carry = _constrain_moments_j(new_carry)
+            return o, new_carry
+
+        _, vjp_fn = jax.vjp(f, carry_before, qc, kc, vc)
+        gcarry_before, gq, gk, gv = vjp_fn((doc, gcarry))
+        return (carry_before, Moments(*gcarry_before)), (gq, gk, gv)
+
+    gzero = jax.tree.map(jnp.zeros_like, final)
+    (_, _), (gqs, gks, gvs) = jax.lax.scan(
+        rev_body, (final, gzero), (qs, ks, vs, ws, dos), reverse=True
+    )
+    gq = _ungroup(jnp.moveaxis(gqs, 0, 3).reshape(b, hkv, g, nc * cs, d))
+    gk = jnp.moveaxis(gks, 0, 2).reshape(b, hkv, nc * cs, d)
+    gv = jnp.moveaxis(gvs, 0, 2).reshape(b, hkv, nc * cs, dv)
+    return (
+        gq[:, :, :n].astype(q.dtype),
+        gk[:, :, :n].astype(k.dtype),
+        gv[:, :, :n].astype(v.dtype),
+    )
+
+
+_causal_scan_cg.defvjp(_causal_scan_cg_fwd, _causal_scan_cg_bwd)
+
+
+def fastmax_causal_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    p: int = 2,
+    chunk_size: int = 128,
+    kv_mask: Optional[jnp.ndarray] = None,
+    denom_eps: float = 1e-6,
+    custom_grad: bool = True,
+    feature_shard: bool = False,
+) -> jnp.ndarray:
+    out_dtype = q.dtype
+    if custom_grad and kv_mask is None:
+        o = _causal_scan_cg(q, k, v, p, chunk_size, denom_eps, feature_shard)
+    else:
+        o, _ = _causal_scan(q, k, v, p=p, chunk_size=chunk_size,
+                            kv_mask=kv_mask, denom_eps=denom_eps,
+                            feature_shard=feature_shard)
+    return o.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful rowwise schedule (+ dropout variants, Fig. 2)
+# ---------------------------------------------------------------------------
+
+
+def _phi_features(x: jnp.ndarray, *, p: int, quad_mask=None) -> jnp.ndarray:
+    """phi(x) with f(q.k) = phi(q).phi(k): [1, x, vec(x x^T)/sqrt(2)]."""
+    parts = [jnp.ones(x.shape[:-1] + (1,), x.dtype), x]
+    if p >= 2:
+        d = x.shape[-1]
+        outer = (x[..., :, None] * x[..., None, :]) / math.sqrt(2.0)
+        outer = outer.reshape(x.shape[:-1] + (d * d,))
+        if quad_mask is not None:
+            outer = outer * quad_mask
+        parts.append(outer)
+    return jnp.concatenate(parts, axis=-1)
+
+
+def fastmax_rowwise(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    p: int = 2,
+    causal: bool = False,
+    denom_eps: float = 1e-6,
+    dropout_rate: float = 0.0,
+    dropout_mode: str = "quadratic",  # "quadratic" | "1d" | "none"
+    dropout_rng: Optional[jax.Array] = None,
+) -> jnp.ndarray:
+    """The paper's own schedule (Eqs. 26-35) via explicit phi features.
+
+    Causal = running prefix sums over n of phi(k_n) [v_n; 1]^T — this is the
+    O(N D^p)-memory layout the paper benchmarks (and that the chunked path
+    supersedes). Supports the Fig. 2 dropout variants:
+      * "quadratic": drop feature dims of the degree-2 block only (their best)
+      * "1d": drop whole dims of q/k tokens before factorization
+    """
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    out_dtype = q.dtype
+    qh = normalize_qk(_f32(q))
+    kh = normalize_qk(_f32(k))
+
+    quad_mask = None
+    if dropout_rate > 0.0 and dropout_rng is not None:
+        if dropout_mode == "quadratic" and p >= 2:
+            keep = jax.random.bernoulli(
+                dropout_rng, 1.0 - dropout_rate, shape=(b, hkv, 1, d * d)
+            )
+            quad_mask = keep.astype(jnp.float32) / (1.0 - dropout_rate)
+        elif dropout_mode == "1d":
+            keep_q = jax.random.bernoulli(dropout_rng, 1.0 - dropout_rate,
+                                          shape=qh.shape)
+            keep_k = jax.random.bernoulli(
+                jax.random.fold_in(dropout_rng, 1), 1.0 - dropout_rate,
+                shape=kh.shape)
+            qh = qh * keep_q / (1.0 - dropout_rate)
+            kh = kh * keep_k / (1.0 - dropout_rate)
+
+    qg = _group_queries(qh, hkv)
+    phq = _phi_features(qg, p=p,
+                        quad_mask=None if quad_mask is None
+                        else quad_mask[:, :, None])
+    phk = _phi_features(kh, p=p, quad_mask=quad_mask)
+    acc = _acc_dtype(q)
+    v1 = jnp.concatenate([_f32(v), jnp.ones(v.shape[:-1] + (1,), acc)],
+                         axis=-1)
+    if causal:
+        # running prefix of phi(k) [v;1]^T: [B,Hkv,N,Df,Dv+1] — the paper's
+        # memory layout. Only use at small scale.
+        outer = phk[..., :, None] * v1[..., None, :]
+        pref = jnp.cumsum(outer, axis=-3)
+        fg = jnp.einsum("...gnf,...nfj->...gnj", phq, pref,
+                        preferred_element_type=acc)
+    else:
+        mom = jnp.einsum("...nf,...nj->...fj", phk, v1,
+                         preferred_element_type=acc)
+        fg = jnp.einsum("...gnf,...fj->...gnj", phq, mom,
+                        preferred_element_type=acc)
+    num, den = fg[..., :-1], fg[..., -1]
+    o = num / (den + denom_eps)[..., None]
+    return _ungroup(o).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def fastmax_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    p: int = 2,
+    causal: bool = False,
+    normalize: bool = True,
+    impl: str = "chunked",      # oracle | rowwise | chunked | kernel
+    chunk_size: int = 128,
+    kv_mask: Optional[jnp.ndarray] = None,
+    denom_eps: float = 1e-6,
+    custom_grad: bool = True,
+    feature_shard: bool = False,
+    dropout_rate: float = 0.0,
+    dropout_mode: str = "quadratic",
+    dropout_rng: Optional[jax.Array] = None,
+) -> jnp.ndarray:
+    """Fastmax attention entry point. q:[B,Hq,N,D], k/v:[B,Hkv,M,*]."""
+    if impl == "oracle":
+        hkv = k.shape[1]
+        qg = _group_queries(q, hkv)
+        o = jax.vmap(
+            lambda qq: fastmax_attention_ref(
+                qq, k, v, p=p, causal=causal, normalize=normalize,
+                denom_eps=denom_eps),
+            in_axes=2, out_axes=2,
+        )(qg)
+        return _ungroup(o)
+    if impl == "rowwise":
+        if not normalize:
+            raise ValueError("rowwise impl always normalizes (paper schedule)")
+        return fastmax_rowwise(
+            q, k, v, p=p, causal=causal, denom_eps=denom_eps,
+            dropout_rate=dropout_rate, dropout_mode=dropout_mode,
+            dropout_rng=dropout_rng,
+        )
+    if impl == "kernel":
+        from repro.kernels import ops as kernel_ops  # lazy: optional dep
+
+        qh = normalize_qk(q) if normalize else q
+        kh = normalize_qk(k) if normalize else k
+        return kernel_ops.fastmax(qh, kh, v, p=p, causal=causal,
+                                  denom_eps=denom_eps)
+    if impl != "chunked":
+        raise ValueError(f"unknown impl {impl!r}")
+
+    if dropout_rate > 0.0 and dropout_rng is not None:
+        # Quadratic-feature dropout requires the explicit-phi path; the
+        # chunked production path is used with dropout disabled (large-scale
+        # pretraining norm) — fall back transparently for small models.
+        return fastmax_rowwise(
+            q, k, v, p=p, causal=causal, denom_eps=denom_eps,
+            dropout_rate=dropout_rate, dropout_mode=dropout_mode,
+            dropout_rng=dropout_rng,
+        )
+
+    qh = normalize_qk(q) if normalize else q
+    kh = normalize_qk(k) if normalize else k
+    if causal:
+        return fastmax_causal_chunked(
+            qh, kh, v, p=p, chunk_size=chunk_size, kv_mask=kv_mask,
+            denom_eps=denom_eps, custom_grad=custom_grad,
+            feature_shard=feature_shard,
+        )
+    return fastmax_noncausal(
+        qh, kh, v, p=p, kv_mask=kv_mask, denom_eps=denom_eps,
+        chunk_size=max(chunk_size, 512), feature_shard=feature_shard,
+    )

@@ -1,0 +1,108 @@
+"""O(N^2) reference oracle for FAST / Fastmax attention (paper Eqs. 5-12).
+
+This module materializes the full attention matrix and is used ONLY for
+testing/validation at small N. The production paths (factorized / chunked /
+Pallas) in `fastmax.py` and `repro.kernels` must match these outputs to
+numerical tolerance.
+
+Shape convention: q, k, v are `[..., N, D]` with arbitrary leading batch/head
+dims. GQA is handled by callers (kv heads broadcast to q heads before entry).
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+__all__ = [
+    "normalize_qk",
+    "poly_kernel",
+    "fastmax_attention_ref",
+    "fastmax_attention_matrix_ref",
+    "softmax_attention_ref",
+]
+
+
+def normalize_qk(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Paper Eqs. 5-6: per-token statistical normalization over the head dim.
+
+    q_hat = (q - mean(q)) / std(q), std computed over the last axis.
+    """
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mu
+    var = jnp.mean(jnp.square(xc), axis=-1, keepdims=True)
+    return xc * jnp.reciprocal(jnp.sqrt(var + eps))
+
+
+def poly_kernel(s: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Paper Eq. 8: f(x) = sum_{l=0..p} x^l / l!  (truncated Taylor of exp)."""
+    if p < 0:
+        raise ValueError(f"p must be >= 0, got {p}")
+    out = jnp.ones_like(s)
+    term = jnp.ones_like(s)
+    for ell in range(1, p + 1):
+        term = term * s / float(ell)
+        out = out + term
+    return out
+
+
+def fastmax_attention_matrix_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    *,
+    p: int = 2,
+    causal: bool = False,
+    normalize: bool = True,
+    denom_eps: float = 0.0,
+) -> jnp.ndarray:
+    """Full attention matrix A (paper Eq. 7/9). For tests and Fig. 4 maps."""
+    if normalize:
+        q = normalize_qk(q)
+        k = normalize_qk(k)
+    s = jnp.einsum("...nd,...md->...nm", q, k)
+    fs = poly_kernel(s, p)
+    if causal:
+        n, m = fs.shape[-2], fs.shape[-1]
+        mask = jnp.tril(jnp.ones((n, m), dtype=bool))
+        fs = jnp.where(mask, fs, 0.0)
+    g = jnp.sum(fs, axis=-1, keepdims=True)
+    return fs / (g + denom_eps)
+
+
+def fastmax_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    p: int = 2,
+    causal: bool = False,
+    normalize: bool = True,
+    denom_eps: float = 0.0,
+) -> jnp.ndarray:
+    """Score O = A V with A = Fastmax(Q K^T) (paper Eqs. 11-12)."""
+    a = fastmax_attention_matrix_ref(
+        q, k, p=p, causal=causal, normalize=normalize, denom_eps=denom_eps
+    )
+    return jnp.einsum("...nm,...mj->...nj", a, v)
+
+
+def softmax_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Vanilla softmax attention baseline (paper Eqs. 1-4)."""
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("...nd,...md->...nm", q, k) * scale
+    if causal:
+        n, m = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((n, m), dtype=bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    a = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    a = a / jnp.sum(a, axis=-1, keepdims=True)
+    return jnp.einsum("...nm,...mj->...nj", a, v)

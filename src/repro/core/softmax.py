@@ -1,0 +1,53 @@
+"""Vanilla softmax attention baseline (paper Eqs. 1-4) with GQA + KV cache.
+
+Implemented because the paper benchmarks against it everywhere (Fig. 3,
+Tables 1-2, Fig. 6). Quadratic in N — `long_500k` is skipped for this
+backend (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = ["softmax_attention"]
+
+
+def softmax_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    kv_mask: Optional[jnp.ndarray] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """q: [B,Hq,N,D]; k,v: [B,Hkv,M,*]; Hq % Hkv == 0.
+
+    `q_offset`: position of q[0] within the key timeline — used for decode
+    (N=1, M=cache length) so causal masking stays correct.
+    """
+    b, hq, n, d = q.shape
+    hkv, m = k.shape[1], k.shape[2]
+    g = hq // hkv
+    out_dtype = q.dtype
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hkv, g, n, d).astype(jnp.float32)
+    s = jnp.einsum("bhgnd,bhmd->bhgnm", qg, k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    neg = jnp.finfo(jnp.float32).min
+    if causal:
+        qpos = jnp.arange(n)[:, None] + q_offset
+        kpos = jnp.arange(m)[None, :]
+        s = jnp.where((kpos <= qpos)[None, None, None], s, neg)
+    if kv_mask is not None:
+        s = jnp.where(kv_mask[:, :, None, None, :].astype(bool), s, neg)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    a = e / jnp.sum(e, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgnm,bhmj->bhgnj", a, v.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, hq, n, -1).astype(out_dtype)

@@ -1,0 +1,7 @@
+"""Data pipeline: synthetic + memmap-backed token streams, host-sharded."""
+from repro.data.pipeline import (  # noqa: F401
+    MemmapDataset,
+    SyntheticLM,
+    make_batch_iterator,
+    write_token_file,
+)

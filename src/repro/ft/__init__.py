@@ -1,0 +1,6 @@
+"""Fault tolerance: preemption handling, straggler detection, auto-resume."""
+from repro.ft.runtime import (  # noqa: F401
+    PreemptionHandler,
+    StragglerMonitor,
+    run_with_restarts,
+)

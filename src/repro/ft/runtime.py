@@ -1,0 +1,109 @@
+"""Fault-tolerance runtime pieces.
+
+At 1000+ node scale the failure model is: frequent preemptions (spot/
+defrag), occasional hard node loss, and slow-node tail latency. The
+train loop composes three mechanisms:
+
+  * `PreemptionHandler` — SIGTERM/SIGINT => set a flag; the step loop
+    checkpoints and exits cleanly at the next step boundary (checkpoints
+    are atomic, so a kill mid-save is also safe).
+  * `StragglerMonitor` — robust step-time tracker (median + MAD). A step
+    slower than `threshold`x the running median is counted; sustained
+    stragglers raise a signal the launcher uses to exclude/replace the
+    slow host (on real fleets: report to the cluster scheduler). Also the
+    data source for EXPERIMENTS' step-time stats.
+  * `run_with_restarts` — supervisor loop: run the step function until
+    completion; on worker failure, restore from the last checkpoint and
+    continue (elastic: restore reshards to the surviving mesh).
+"""
+from __future__ import annotations
+
+import signal
+import statistics
+import time
+from typing import Callable, Optional
+
+__all__ = ["PreemptionHandler", "StragglerMonitor", "run_with_restarts"]
+
+
+class PreemptionHandler:
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self.requested = False
+        self._old = {}
+        for s in signals:
+            try:
+                self._old[s] = signal.signal(s, self._on)
+            except ValueError:          # not main thread (tests)
+                pass
+
+    def _on(self, signum, frame):
+        self.requested = True
+
+    def restore(self):
+        for s, h in self._old.items():
+            signal.signal(s, h)
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, window: int = 50,
+                 patience: int = 3):
+        self.threshold = threshold
+        self.window = window
+        self.patience = patience
+        self.times: list[float] = []
+        self.strikes = 0
+        self._t0: Optional[float] = None
+
+    def start_step(self):
+        self._t0 = time.monotonic()
+
+    def end_step(self) -> float:
+        dt = time.monotonic() - self._t0
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if len(self.times) >= 8 and dt > self.threshold * self.median():
+            self.strikes += 1
+        else:
+            self.strikes = max(0, self.strikes - 1)
+        return dt
+
+    def median(self) -> float:
+        return statistics.median(self.times) if self.times else 0.0
+
+    @property
+    def straggling(self) -> bool:
+        return self.strikes >= self.patience
+
+    def stats(self) -> dict:
+        if not self.times:
+            return {}
+        med = self.median()
+        return {"median_s": med,
+                "p90_s": sorted(self.times)[int(0.9 * (len(self.times) - 1))],
+                "max_s": max(self.times),
+                "straggling": self.straggling}
+
+
+def run_with_restarts(make_state: Callable[[], tuple],
+                      run: Callable[..., int],
+                      *, max_restarts: int = 10,
+                      on_restart: Optional[Callable[[int, Exception], None]]
+                      = None) -> int:
+    """Supervisor: (re)build state (restoring the latest checkpoint) and run
+    until `run` returns normally. Worker exceptions trigger restore+retry —
+    the node-failure path of the real launcher, exercised in tests by
+    injecting faults."""
+    attempt = 0
+    while True:
+        state = make_state()
+        try:
+            return run(*state)
+        except KeyboardInterrupt:
+            raise
+        except Exception as e:  # noqa: BLE001 — any worker failure
+            attempt += 1
+            if attempt > max_restarts:
+                raise
+            if on_restart is not None:
+                on_restart(attempt, e)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the Fastmax hot paths (+ interpret-mode fallback).
+
+fastmax_causal.py    — chunked prefix-scan causal attention (training)
+fastmax_noncausal.py — two-phase moments+combine (encoder / cross-attn)
+fastmax_decode.py    — fused state-update + combine for serving
+ops.py               — jit'd dispatchers; ref.py — pure-jnp oracle
+"""
+from repro.kernels import ops  # noqa: F401

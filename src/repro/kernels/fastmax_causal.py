@@ -1,0 +1,213 @@
+"""Pallas TPU kernel: causal Fastmax attention via chunked prefix scan.
+
+TPU-native redesign of the paper's masked Fastmax (DESIGN.md §2). The paper's
+GPU code carries *per-row* prefix moments (O(N D^{p+1}) memory → the D× causal
+wall-clock penalty they report in §3.1). Here the sequence is processed in
+chunks of C tokens along a sequential grid axis; the running moments live in
+VMEM scratch (O(D^{p+1}) bytes total), and every heavy op is an MXU matmul:
+
+  intra-chunk:  S = Q K^T  (C×C),  f(S) masked, f(S)·V
+  inter-chunk:  φ₂(Q) contracted against the moment carry, blocked over the
+                first moment index so each step is a
+                [G·C, bm·D] @ [bm·D, Dv] matmul (bm chosen so bm·D ≈ 256-512)
+
+Layout notes (TPU):
+  * degree-2 moment scratch is [D·D, Dv] (m-major) so both the update
+    (T^T @ V) and the query contraction slice contiguous row blocks — no
+    reshapes of scratch, only a [C, bm, D] → [C, bm·D] collapse of the
+    last two dims of a freshly built tile.
+  * grid = (B·Hkv, N/C): head axis "parallel" (independent), chunk axis
+    "arbitrary" (sequential — the scan carry).
+  * GQA: Q arrives [B·Hkv, G, N, D]; the G query heads of a group are
+    flattened into matmul rows so moments are computed ONCE per kv head
+    (the paper's reference code recomputes them per q head).
+  * fp32 accumulation regardless of input dtype (f64 in interpret tests).
+
+Validated against `repro.kernels.ref.fastmax_ref` in interpret mode
+(tests/test_kernels.py) across shapes, dtypes, p∈{1,2}, and GQA group sizes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fastmax_causal_pallas"]
+
+
+def _poly(s, p):
+    out = 1.0 + s
+    if p >= 2:
+        out = out + 0.5 * s * s
+    return out
+
+
+def _causal_kernel(
+    q_ref,   # [1, G, C, D]
+    k_ref,   # [1, C, D]
+    v_ref,   # [1, C, Dv]
+    w_ref,   # [1, C]       validity mask (1=real token, 0=padding)
+    o_ref,   # [1, G, C, Dv]
+    m0_s,    # [1, Dv]      scratch: Σ w v
+    m1_s,    # [D, Dv]      scratch: Σ w k v^T
+    m2_s,    # [D*D, Dv]    scratch: Σ w (k⊗k) v^T   (p=2)
+    g0_s,    # [1, 1]
+    g1_s,    # [1, D]
+    g2_s,    # [D, D]       (p=2)
+    *,
+    p: int,
+    bm: int,
+    denom_eps: float,
+    acc,
+):
+    c = pl.program_id(1)
+    g, cs, d = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
+    dv = v_ref.shape[2]
+
+    f32 = acc
+    @pl.when(c == 0)
+    def _init():
+        m0_s[...] = jnp.zeros_like(m0_s)
+        m1_s[...] = jnp.zeros_like(m1_s)
+        g0_s[...] = jnp.zeros_like(g0_s)
+        g1_s[...] = jnp.zeros_like(g1_s)
+        if p >= 2:
+            m2_s[...] = jnp.zeros_like(m2_s)
+            g2_s[...] = jnp.zeros_like(g2_s)
+
+    q = q_ref[0].astype(f32).reshape(g * cs, d)   # [GC, D]
+    k = k_ref[0].astype(f32)                      # [C, D]
+    v = v_ref[0].astype(f32)                      # [C, Dv]
+    w = w_ref[0].astype(f32)                      # [C]
+
+    # ---- inter-chunk: contract carry (strictly-previous chunks) with q ----
+    num = jnp.broadcast_to(m0_s[...], (g * cs, dv)) + jnp.dot(
+        q, m1_s[...], preferred_element_type=f32
+    )
+    den = g0_s[0, 0] + jnp.dot(q, g1_s[0], preferred_element_type=f32)
+    if p >= 2:
+        den = den + 0.5 * jnp.sum(
+            jnp.dot(q, g2_s[...], preferred_element_type=f32) * q,
+            axis=-1,
+        )
+
+        def mb_step(i, acc):
+            qm = jax.lax.dynamic_slice_in_dim(q, i * bm, bm, 1)  # [GC, bm]
+            y = (qm[:, :, None] * q[:, None, :]).reshape(g * cs, bm * d)
+            z = m2_s[pl.dslice(i * bm * d, bm * d), :]      # [bm*D, Dv]
+            return acc + jnp.dot(y, z, preferred_element_type=f32)
+
+        num = num + 0.5 * jax.lax.fori_loop(
+            0, d // bm, mb_step, jnp.zeros((g * cs, dv), f32)
+        )
+
+    # ---- intra-chunk: exact causal block through f(QK^T) ----
+    s = jnp.dot(q, k.T, preferred_element_type=f32)  # [GC, C]
+    fs = _poly(s, p)
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (g * cs, cs), 0) % cs
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (g * cs, cs), 1)
+    fs = jnp.where(qpos >= kpos, fs, 0.0) * w[None, :]
+    num = num + jnp.dot(fs, v, preferred_element_type=f32)
+    den = den + jnp.sum(fs, axis=-1)
+
+    o = num / (den + denom_eps)[:, None]
+    o_ref[0] = o.reshape(g, cs, dv).astype(o_ref.dtype)
+
+    # ---- fold this chunk into the carry ----
+    kw = k * w[:, None]
+    vw = v * w[:, None]
+    m0_s[...] += jnp.sum(vw, axis=0, keepdims=True)
+    m1_s[...] += jnp.dot(kw.T, v, preferred_element_type=f32)
+    g0_s[...] += jnp.sum(w).reshape(1, 1)
+    g1_s[...] += jnp.sum(kw, axis=0, keepdims=True)
+    if p >= 2:
+        g2_s[...] += jnp.dot(kw.T, k, preferred_element_type=f32)
+
+        def mb_up(i, _):
+            km = jax.lax.dynamic_slice_in_dim(k, i * bm, bm, 1)  # [C, bm]
+            t = (km[:, :, None] * k[:, None, :]).reshape(cs, bm * d)
+            m2_s[pl.dslice(i * bm * d, bm * d), :] += jnp.dot(
+                t.T, vw, preferred_element_type=f32
+            )
+            return 0
+
+        jax.lax.fori_loop(0, d // bm, mb_up, 0)
+
+
+def _pick_bm(d: int) -> int:
+    """Largest divisor of d with bm*d <= 512 (MXU-friendly inner tiles)."""
+    best = 1
+    for bm in range(1, d + 1):
+        if d % bm == 0 and bm * d <= 512:
+            best = bm
+    return best
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("p", "chunk_size", "denom_eps", "interpret", "out_dtype"),
+)
+def fastmax_causal_pallas(
+    q: jnp.ndarray,  # [B, Hq, N, D]  (pre-normalized q̂)
+    k: jnp.ndarray,  # [B, Hkv, N, D] (pre-normalized k̂)
+    v: jnp.ndarray,  # [B, Hkv, N, Dv]
+    *,
+    p: int = 2,
+    chunk_size: int = 128,
+    denom_eps: float = 1e-6,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jnp.ndarray:
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    dv = v.shape[-1]
+    g = hq // hkv
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} % Hkv={hkv} != 0")
+    out_dtype = out_dtype or q.dtype
+
+    cs = min(chunk_size, max(8, n))
+    nc = -(-n // cs)
+    pad = nc * cs - n
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0))).reshape(
+        b, hkv, g, nc * cs, d).reshape(b * hkv, g, nc * cs, d)
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))).reshape(
+        b * hkv, nc * cs, d)
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))).reshape(
+        b * hkv, nc * cs, dv)
+    acc = jnp.promote_types(q.dtype, jnp.float32)
+    w = jnp.pad(jnp.ones((b * hkv, n), acc), ((0, 0), (0, pad)))
+
+    bm = _pick_bm(d)
+    kernel = functools.partial(_causal_kernel, p=p, bm=bm, denom_eps=denom_eps,
+                               acc=acc)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hkv, nc),
+        in_specs=[
+            pl.BlockSpec((1, g, cs, d), lambda h, c: (h, 0, c, 0)),
+            pl.BlockSpec((1, cs, d), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, cs, dv), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, cs), lambda h, c: (h, c)),
+        ],
+        out_specs=pl.BlockSpec((1, g, cs, dv), lambda h, c: (h, 0, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, nc * cs, dv), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, dv), acc),
+            pltpu.VMEM((d, dv), acc),
+            pltpu.VMEM((d * d if p >= 2 else 1, dv), acc),
+            pltpu.VMEM((1, 1), acc),
+            pltpu.VMEM((1, d), acc),
+            pltpu.VMEM((d, d), acc),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name=f"fastmax_causal_p{p}",
+    )(qp, kp, vp, w)
+    out = out.reshape(b, hkv, g, nc * cs, dv)[:, :, :, :n]
+    return out.reshape(b, hq, n, dv)

@@ -1,0 +1,88 @@
+"""jit'd wrappers for the Fastmax Pallas kernels.
+
+Dispatch policy:
+  * on TPU: compiled Pallas kernels.
+  * elsewhere (this CPU container, tests): interpret=True — the kernel body
+    executes in Python/XLA-CPU for bit-level validation of the SAME code
+    that Mosaic would compile for TPU.
+
+Training gradients: the kernel forward is paired (via custom_vjp) with the
+memory-reduced chunked backward from `repro.core.fastmax` (paper §2.5) — the
+backward recomputes moments reversibly instead of storing per-chunk state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fastmax as _fm
+from repro.kernels.fastmax_causal import fastmax_causal_pallas
+from repro.kernels.fastmax_decode import fastmax_decode_pallas
+from repro.kernels.fastmax_noncausal import fastmax_noncausal_pallas
+
+__all__ = ["fastmax", "fastmax_decode", "use_interpret"]
+
+
+def use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _fastmax_causal_trainable(q, k, v, p, chunk_size, denom_eps, interpret):
+    return fastmax_causal_pallas(
+        q, k, v, p=p, chunk_size=chunk_size, denom_eps=denom_eps,
+        interpret=interpret)
+
+
+def _fc_fwd(q, k, v, p, chunk_size, denom_eps, interpret):
+    o = fastmax_causal_pallas(
+        q, k, v, p=p, chunk_size=chunk_size, denom_eps=denom_eps,
+        interpret=interpret)
+    # full-sequence moments: the only extra residual the reversible
+    # backward needs beyond (q, k, v) — O(D^{p+1}), not O(N D^p).
+    mom = _fm.compute_moments(k, v, p=p)
+    return o, (q, k, v, mom)
+
+
+def _fc_bwd(p, chunk_size, denom_eps, interpret, res, do):
+    q, k, v, final = res
+    return _fm._causal_scan_cg_bwd(p, chunk_size, denom_eps, False,
+                                   (q, k, v, final), do)
+
+
+_fastmax_causal_trainable.defvjp(_fc_fwd, _fc_bwd)
+
+
+def fastmax(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    p: int = 2,
+    causal: bool = False,
+    chunk_size: int = 128,
+    denom_eps: float = 1e-6,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Kernel-backed fastmax on pre-normalized q̂/k̂ (GQA-aware)."""
+    if interpret is None:
+        interpret = use_interpret()
+    if causal:
+        return _fastmax_causal_trainable(
+            q, k, v, p, chunk_size, denom_eps, interpret)
+    return fastmax_noncausal_pallas(
+        q, k, v, p=p, chunk_size=chunk_size, denom_eps=denom_eps,
+        interpret=interpret)
+
+
+def fastmax_decode(
+    q, k, v, state, *, p: int = 2, denom_eps: float = 1e-6,
+    interpret: bool | None = None,
+):
+    """Kernel-backed single-token decode step on moment-tuple state."""
+    if interpret is None:
+        interpret = use_interpret()
+    return fastmax_decode_pallas(
+        q, k, v, tuple(state), p=p, denom_eps=denom_eps, interpret=interpret)

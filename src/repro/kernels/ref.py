@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the Pallas kernels.
+
+Same GQA interface as the kernels (q:[B,Hq,N,D], k/v:[B,Hkv,M,*]); delegates
+to the O(N^2) core reference. Kernels are validated against this in
+interpret mode across shape/dtype sweeps (tests/test_kernels.py).
+
+NOTE: kernels take PRE-NORMALIZED q̂, k̂ (normalization is done once by the
+caller, outside the kernel), so this oracle runs with normalize=False.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.ref import fastmax_attention_ref
+from repro.core.fastmax import Moments, compute_moments, combine_with_queries
+
+__all__ = ["fastmax_ref", "fastmax_decode_ref"]
+
+
+def _bcast_kv(x: jnp.ndarray, hq: int) -> jnp.ndarray:
+    b, hkv, m, d = x.shape
+    g = hq // hkv
+    return jnp.broadcast_to(
+        x[:, :, None], (b, hkv, g, m, d)).reshape(b, hq, m, d)
+
+
+def fastmax_ref(q, k, v, *, p=2, causal=False, denom_eps=1e-6):
+    """Oracle with GQA broadcast; expects pre-normalized q̂/k̂."""
+    hq = q.shape[1]
+    kb, vb = _bcast_kv(k, hq), _bcast_kv(v, hq)
+    return fastmax_attention_ref(
+        q, kb, vb, p=p, causal=causal, normalize=False, denom_eps=denom_eps
+    )
+
+
+def fastmax_decode_ref(q, k, v, state, *, p=2, denom_eps=1e-6):
+    """Oracle decode step on explicit moment-tuple state (pre-normalized)."""
+    mom = Moments(*state)
+    new = mom + compute_moments(k, v, p=p)
+    b, hq, _, d = q.shape
+    hkv = k.shape[1]
+    qg = q.reshape(b, hkv, hq // hkv, d)
+    num, den = combine_with_queries(qg, new, p=p)
+    o = num / (den + denom_eps)[..., None]
+    return o.reshape(b, hq, 1, -1).astype(q.dtype), tuple(new)

@@ -1,0 +1,1 @@
+"""Launch: mesh construction, dry-run, training and serving drivers."""

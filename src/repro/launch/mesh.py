@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state. Single pod = 16x16 = 256 chips (v5e); multi-pod = 2 pods = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CI-style sharding tests (8 forced host devices)."""
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

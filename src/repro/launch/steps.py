@@ -1,0 +1,68 @@
+"""train_step / serve_step factories shared by the launcher and the dry-run.
+
+train_step = fwd + bwd + global-norm clip + optimizer update (donated
+params/opt buffers). serve_step = one decode token for the whole model
+(donated state). Both are pure functions closed over the static ModelConfig.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, model_loss
+from repro.models.transformer import ModelConfig
+from repro.optim import clip_by_global_norm, make_optimizer, warmup_cosine
+
+__all__ = ["make_train_step", "make_serve_step", "make_prefill_step",
+           "pick_optimizer"]
+
+
+def pick_optimizer(cfg: ModelConfig, n_params: int, *, lr=3e-4,
+                   total_steps=100_000):
+    """Policy: Lion (2B/param state) for >=100B-param configs, AdamW below."""
+    name = "lion" if n_params >= 100e9 else "adamw"
+    lr_fn = warmup_cosine(lr, min(2000, total_steps // 10), total_steps)
+    return name, make_optimizer(name, lr_fn)
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *, clip_norm: float = 1.0):
+    _, opt_update = optimizer
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model_loss, has_aux=True)(params, batch, cfg)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = opt_update(grads, opt_state, params)
+        out_metrics = {"loss": loss.astype(jnp.float32),
+                       "gnorm": gnorm.astype(jnp.float32), **metrics}
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, *, greedy: bool = True):
+    def serve_step(params, state, token, position, enc_out=None):
+        p = params["decoder"] if cfg.encoder_layers > 0 else params
+        logits, new_state = decode_step(p, state, token, cfg,
+                                        position=position, enc_out=enc_out)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, new_state
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Prompt prefill: full forward that primes the decode state (fastmax:
+    chunked moment scan — linear in prompt; softmax: KV-cache fill)."""
+    from repro.models.transformer import lm_prefill
+
+    def prefill_step(params, state, tokens, enc_out=None):
+        p = params["decoder"] if cfg.encoder_layers > 0 else params
+        logits, new_state = lm_prefill(p, tokens, cfg, state, enc_out=enc_out)
+        last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return last, new_state
+
+    return prefill_step

@@ -1,0 +1,11 @@
+"""Model substrate: layers, MoE, MLA, Mamba, xLSTM, transformer assembly."""
+from repro.models.transformer import ModelConfig  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    decode_state_specs,
+    decode_step,
+    init_decode_state,
+    init_model,
+    input_specs,
+    model_forward,
+    model_loss,
+)

@@ -1,0 +1,70 @@
+"""Encoder-decoder assembly (whisper-small backbone).
+
+Per the assignment the conv/mel frontend is a STUB: `input_specs()` feeds
+precomputed frame embeddings [B, n_frames, d_model] to the encoder. The
+backbone is real: encoder (noncausal self-attn blocks), decoder (causal
+self-attn + cross-attn to encoder output).
+
+FAST applies to all three attention sites: noncausal fastmax (encoder,
+cross) and causal fastmax (decoder self) — see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import (
+    ModelConfig,
+    forward_lm,
+    init_lm,
+    init_lm_decode_state,
+    lm_decode_step,
+    lm_loss,
+    lm_prefill,
+)
+
+__all__ = ["encoder_config", "init_encdec", "forward_encdec", "encdec_loss",
+           "encode"]
+
+
+def encoder_config(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(
+        cfg,
+        n_layers=cfg.encoder_layers,
+        first_k_dense=0,
+        cross_attention=False,
+        input_embeddings_only=True,
+        rope_theta=0.0,
+        pos_emb="sinusoidal",
+    )
+
+
+def init_encdec(key: jax.Array, cfg: ModelConfig, *, abstract: bool = False):
+    k_enc, k_dec = (key, key) if abstract else tuple(jax.random.split(key))
+    enc_params, enc_axes = init_lm(k_enc, encoder_config(cfg),
+                                   abstract=abstract)
+    dec_params, dec_axes = init_lm(k_dec, cfg, abstract=abstract)
+    return ({"encoder": enc_params, "decoder": dec_params},
+            {"encoder": enc_axes, "decoder": dec_axes})
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: [B, T_enc, d_model] (stub frontend output)."""
+    hidden, _ = forward_lm(params["encoder"], None, encoder_config(cfg),
+                           causal=False, embeddings=frames,
+                           return_hidden=True)
+    return hidden
+
+
+def forward_encdec(params, batch, cfg: ModelConfig):
+    enc_out = encode(params, batch["frames"], cfg)
+    return forward_lm(params["decoder"], batch["tokens"], cfg,
+                      enc_out=enc_out)
+
+
+def encdec_loss(params, batch, cfg: ModelConfig):
+    enc_out = encode(params, batch["frames"], cfg)
+    dec_batch = {**batch, "enc_out": enc_out}
+    return lm_loss(params["decoder"], dec_batch, cfg)

@@ -1,0 +1,330 @@
+"""Model layers: norms, RoPE, MLP, and attention with pluggable score backend.
+
+The attention layer is where the paper's technique plugs in: `attn_backend`
+selects softmax (vanilla baseline), fastmax1, or fastmax2 (the paper's p=1/2
+polynomial kernels). Everything else (GQA, qk-norm, biases, RoPE, MLA) is
+orthogonal — FAST is a drop-in replacement for the score computation, which
+is exactly the paper's §5 claim.
+
+Decode states:
+  softmax  -> KVCache (O(N) per sequence)
+  fastmax* -> Moments (O(D^2 Dv) per kv head, independent of context length)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    Moments,
+    fastmax_attention,
+    fastmax_decode_step,
+    fastmax_prefill,
+    init_fastmax_state,
+    softmax_attention,
+)
+from repro.models.param import Builder
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(b: Builder, name: str, dim: int, norm_type: str = "rmsnorm"):
+    sub = b.sub(name)
+    sub.add("scale", (dim,), ("embed",), init="ones")
+    if norm_type == "layernorm":
+        sub.add("bias", (dim,), ("embed",), init="zeros")
+
+
+def apply_norm(params, x, *, norm_type: str = "rmsnorm", eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    elif norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(
+            jnp.float32)
+    else:
+        raise ValueError(norm_type)
+    return out.astype(x.dtype)
+
+
+def rms_norm_headwise(x, eps: float = 1e-6):
+    """Parameter-free per-head RMS norm (qk_norm without learned scale is
+    handled by callers passing a scale param)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: [B, H, N, D]; positions: [B, N] or [N]."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,N,D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(b: Builder, name: str, d_model: int, d_ff: int, act: str):
+    sub = b.sub(name)
+    if act == "swiglu":
+        sub.add("wi_gate", (d_model, d_ff), ("embed", "ff"))
+        sub.add("wi_up", (d_model, d_ff), ("embed", "ff"))
+    else:
+        sub.add("wi", (d_model, d_ff), ("embed", "ff"))
+    sub.add("wo", (d_ff, d_model), ("ff", "embed"))
+
+
+def apply_mlp(params, x, *, act: str):
+    if act == "swiglu":
+        g = jnp.einsum("bnd,df->bnf", x, params["wi_gate"])
+        u = jnp.einsum("bnd,df->bnf", x, params["wi_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("bnd,df->bnf", x, params["wi"]))
+    return jnp.einsum("bnf,fd->bnd", h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + pluggable backend + optional MLA projections)
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray      # [B, Hkv, Nmax, D]
+    v: jnp.ndarray      # [B, Hkv, Nmax, Dv]
+    length: jnp.ndarray  # [] int32
+
+
+class AttnState(NamedTuple):
+    """Union decode state: exactly one of (kv, moments) is used."""
+    kv: Optional[KVCache]
+    moments: Optional[Moments]
+
+
+def init_attention(b: Builder, name: str, cfg) -> None:
+    sub = b.sub(name)
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.use_mla:
+        rank = cfg.kv_lora_rank
+        qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+        sub.add("wq", (d, hq, qk_dim), ("embed", "heads", "head_dim"))
+        sub.add("w_dkv", (d, rank + cfg.qk_rope_dim), ("embed", None))
+        sub.add("w_uk", (rank, hq, cfg.qk_nope_dim), (None, "heads", "head_dim"))
+        sub.add("w_uv", (rank, hq, hd), (None, "heads", "head_dim"))
+        sub.add("wo", (hq, hd, d), ("heads", "head_dim", "embed"),
+                fan_in=hq * hd)
+    else:
+        sub.add("wq", (d, hq, hd), ("embed", "heads", "head_dim"))
+        sub.add("wk", (d, hkv, hd), ("embed", "kv_heads", "head_dim"))
+        sub.add("wv", (d, hkv, hd), ("embed", "kv_heads", "head_dim"))
+        sub.add("wo", (hq, hd, d), ("heads", "head_dim", "embed"),
+                fan_in=hq * hd)
+        if cfg.qkv_bias:
+            sub.add("bq", (hq, hd), ("heads", "head_dim"), init="zeros")
+            sub.add("bk", (hkv, hd), ("kv_heads", "head_dim"), init="zeros")
+            sub.add("bv", (hkv, hd), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        sub.add("q_norm_scale", (cfg.qk_nope_dim + cfg.qk_rope_dim
+                                 if cfg.use_mla else hd,),
+                (None,), init="ones")
+        sub.add("k_norm_scale", (cfg.qk_nope_dim + cfg.qk_rope_dim
+                                 if cfg.use_mla else hd,),
+                (None,), init="ones")
+
+
+def _project_qkv(params, x, cfg, positions):
+    """Returns q:[B,Hq,N,Dq], k:[B,Hkv,N,Dq], v:[B,Hkv,N,Dv]."""
+    if cfg.use_mla:
+        q = jnp.einsum("bnd,dhk->bhnk", x, params["wq"])
+        ckv = jnp.einsum("bnd,dr->bnr", x, params["w_dkv"])
+        c, k_rope = (ckv[..., : cfg.kv_lora_rank],
+                     ckv[..., cfg.kv_lora_rank:])
+        k_nope = jnp.einsum("bnr,rhk->bhnk", c, params["w_uk"])
+        v = jnp.einsum("bnr,rhk->bhnk", c, params["w_uv"])
+        q_nope, q_rope = (q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:])
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[:, None], positions, cfg.rope_theta)
+        k_rope = jnp.broadcast_to(
+            k_rope, (x.shape[0], q.shape[1], x.shape[1], cfg.qk_rope_dim))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, k_rope], axis=-1)
+        # MLA decompresses to per-(q)head k/v: treat as Hkv == Hq downstream
+    else:
+        q = jnp.einsum("bnd,dhk->bhnk", x, params["wq"])
+        k = jnp.einsum("bnd,dhk->bhnk", x, params["wk"])
+        v = jnp.einsum("bnd,dhk->bhnk", x, params["wv"])
+        if cfg.qkv_bias:
+            q = q + params["bq"][None, :, None, :]
+            k = k + params["bk"][None, :, None, :]
+            v = v + params["bv"][None, :, None, :]
+        if cfg.rope_theta > 0:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.qk_norm:
+        q = rms_norm_headwise(q) * params["q_norm_scale"]
+        k = rms_norm_headwise(k) * params["k_norm_scale"]
+    return q, k, v
+
+
+def _bcast_kv(k, hq):
+    """Broadcast kv heads to q heads (kv-major repeat) — softmax path."""
+    b, hkv, n, d = k.shape
+    if hkv == hq:
+        return k
+    return jnp.repeat(k, hq // hkv, axis=1)
+
+
+def _feature_shard_flag(hkv: int) -> bool:
+    """True when KV heads do NOT divide the 'model' axis of the active mesh
+    (GQA/MQA at TP degree > Hkv): the kv moment update would replicate
+    TP-ways, so fastmax switches to token-sharded updates (partial moments
+    + one small psum per chunk)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            from jax._src import mesh as mesh_lib
+            mesh = mesh_lib.thread_resources.env.physical_mesh
+    except Exception:
+        return False
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return False
+    return hkv % mesh.shape["model"] != 0
+
+
+def _run_backend(q, k, v, cfg, *, causal, kv_mask=None):
+    if cfg.attn_backend == "softmax":
+        k = _bcast_kv(k, q.shape[1])
+        v = _bcast_kv(v, q.shape[1])
+        if kv_mask is not None and kv_mask.shape[1] != q.shape[1]:
+            kv_mask = jnp.repeat(kv_mask, q.shape[1] // kv_mask.shape[1],
+                                 axis=1)
+        return softmax_attention(q, k, v, causal=causal, kv_mask=kv_mask)
+    p = 1 if cfg.attn_backend == "fastmax1" else 2
+    # grouped path: moments computed once per KV head (G-fold combine);
+    # the head-sharded group reshape tiles cleanly because consecutive
+    # q-head shards stay within one kv group (H/s <= G for all configs)
+    return fastmax_attention(
+        q, k, v, p=p, causal=causal, impl=cfg.attn_impl,
+        chunk_size=cfg.chunk_size, kv_mask=kv_mask,
+        denom_eps=cfg.denom_eps,
+        feature_shard=_feature_shard_flag(k.shape[1]),
+    )
+
+
+def apply_attention(params, x, cfg, *, causal=True, positions=None,
+                    kv_mask=None, kv_x: Optional[jnp.ndarray] = None):
+    """Full-sequence attention. `kv_x` (cross-attention source) optional."""
+    b, n, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(n, dtype=jnp.int32)
+    if kv_x is None:
+        q, k, v = _project_qkv(params, x, cfg, positions)
+    else:
+        # cross-attention: q from x, k/v from kv_x (no causal, no rope on kv)
+        m = kv_x.shape[1]
+        kv_pos = jnp.arange(m, dtype=jnp.int32)
+        q, _, _ = _project_qkv(params, x, cfg, positions)
+        _, k, v = _project_qkv(params, kv_x, cfg, kv_pos)
+    o = _run_backend(q, k, v, cfg, causal=causal, kv_mask=kv_mask)
+    return jnp.einsum("bhnk,hkd->bnd", o.astype(x.dtype), params["wo"])
+
+
+# -- decode -----------------------------------------------------------------
+
+
+def init_attn_state(cfg, batch: int, max_len: int, dtype) -> AttnState:
+    hkv = cfg.n_heads if cfg.use_mla else cfg.n_kv_heads
+    dq = (cfg.qk_nope_dim + cfg.qk_rope_dim) if cfg.use_mla else cfg.head_dim
+    if cfg.attn_backend == "softmax":
+        kv = KVCache(
+            k=jnp.zeros((batch, hkv, max_len, dq), dtype),
+            v=jnp.zeros((batch, hkv, max_len, cfg.head_dim), dtype),
+            length=jnp.zeros((), jnp.int32),
+        )
+        return AttnState(kv=kv, moments=None)
+    p = 1 if cfg.attn_backend == "fastmax1" else 2
+    mom = init_fastmax_state(batch, hkv, dq, cfg.head_dim, p=p,
+                             dtype=jnp.float32)
+    return AttnState(kv=None, moments=mom)
+
+
+def attention_decode(params, x_t, state: AttnState, cfg, *, position):
+    """One-token decode. x_t: [B, 1, d]. Returns (y_t, new_state)."""
+    pos = jnp.reshape(position, (1,)).astype(jnp.int32)
+    q, k, v = _project_qkv(params, x_t, cfg, pos)
+    if cfg.attn_backend == "softmax":
+        kv = state.kv
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kv.k, k.astype(kv.k.dtype), kv.length, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            kv.v, v.astype(kv.v.dtype), kv.length, axis=2)
+        nmax = kc.shape[2]
+        mask = (jnp.arange(nmax)[None, None, :] <= kv.length).astype(
+            jnp.float32) * jnp.ones((x_t.shape[0], kc.shape[1], 1))
+        o = softmax_attention(q, kc, vc, causal=False, kv_mask=mask)
+        new = AttnState(kv=KVCache(kc, vc, kv.length + 1), moments=None)
+    else:
+        p = 1 if cfg.attn_backend == "fastmax1" else 2
+        o, mom = fastmax_decode_step(state.moments, q, k, v, p=p,
+                                     denom_eps=cfg.denom_eps)
+        new = AttnState(kv=None, moments=mom)
+    y = jnp.einsum("bhnk,hkd->bnd", o.astype(x_t.dtype), params["wo"])
+    return y, new
+
+
+def attention_prefill(params, x, state: AttnState, cfg, *, positions=None):
+    """Prefill a prompt, returning outputs and a primed decode state."""
+    b, n, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(n, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if cfg.attn_backend == "softmax":
+        kv = state.kv
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kv.k, k.astype(kv.k.dtype), 0, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            kv.v, v.astype(kv.v.dtype), 0, axis=2)
+        o = softmax_attention(q, k, v, causal=True)
+        new = AttnState(kv=KVCache(kc, vc, jnp.asarray(n, jnp.int32)),
+                        moments=None)
+    else:
+        p = 1 if cfg.attn_backend == "fastmax1" else 2
+        # grouped path (moments shared per KV head); the carried moment
+        # state stays per-KV-HEAD (moments never involve q)
+        o = fastmax_attention(
+            q, k, v, p=p, causal=True, impl=cfg.attn_impl,
+            chunk_size=cfg.chunk_size, denom_eps=cfg.denom_eps,
+            feature_shard=_feature_shard_flag(k.shape[1]))
+        from repro.core.fastmax import (compute_moments_chunked,
+                                        normalize_qk as _nq)
+        mom = compute_moments_chunked(_nq(k), v, p=p,
+                                      chunk_size=max(cfg.chunk_size, 512))
+        new = AttnState(kv=None, moments=mom)
+    y = jnp.einsum("bhnk,hkd->bnd", o.astype(x.dtype), params["wo"])
+    return y, new

@@ -1,0 +1,158 @@
+"""Mamba (selective SSM) mixer block — for the jamba hybrid architecture.
+
+Chunked linear-recurrence evaluation: `lax.scan` over chunks of `chunk`
+tokens with an associative scan inside each chunk, so peak memory is
+O(B·chunk·d_inner·d_state) instead of O(B·N·d_inner·d_state), and training
+backward stores only chunk-boundary states (same trick as the fastmax
+chunked scan). Decode keeps (conv buffer, ssm state) — O(1) per token.
+
+FAST applicability: none (attention-free mixer) — see DESIGN.md
+§Arch-applicability. Included because jamba interleaves it 7:1 with
+(fastmax-)attention layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import Builder
+
+__all__ = ["init_mamba", "apply_mamba", "mamba_decode", "init_mamba_state",
+           "MambaState"]
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray  # [B, d_conv-1, d_inner]
+    h: jnp.ndarray     # [B, d_inner, d_state]
+
+
+def _dims(cfg):
+    di = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return di, dt_rank, cfg.mamba_d_state, cfg.mamba_d_conv
+
+
+def init_mamba(b: Builder, name: str, cfg) -> None:
+    sub = b.sub(name)
+    d = cfg.d_model
+    di, dt_rank, ds, dc = _dims(cfg)
+    sub.add("in_proj", (d, 2 * di), ("embed", "ff"))
+    sub.add("conv_w", (dc, di), (None, "ff"), scale=1.0 / math.sqrt(dc))
+    sub.add("conv_b", (di,), ("ff",), init="zeros")
+    sub.add("x_proj", (di, dt_rank + 2 * ds), ("ff", None))
+    sub.add("dt_proj", (dt_rank, di), (None, "ff"),
+            scale=dt_rank ** -0.5)
+    sub.add("dt_bias", (di,), ("ff",), init="zeros")
+    # S4D-real init: A = -[1..ds] per channel
+    a = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    sub.constant("A_log", jnp.log(a), ("ff", None))
+    sub.add("D", (di,), ("ff",), init="ones")
+    sub.add("out_proj", (di, d), ("ff", "embed"))
+
+
+def _causal_conv(x, w, b_, *, state=None):
+    """x: [B, N, di]; depthwise causal conv, kernel dc. state: last dc-1 in."""
+    dc = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(dc))
+    new_state = xp[:, -(dc - 1):] if dc > 1 else pad
+    return out + b_[None, None, :], new_state
+
+
+def _selective_scan(u, delta, a, bmat, cmat, d_skip, *, h0, chunk=128):
+    """h_t = exp(Δ_t A)·h_{t-1} + Δ_t·B_t·u_t ;  y_t = C_t·h_t + D·u_t.
+
+    u, delta: [B, N, di]; bmat, cmat: [B, N, ds]; a: [di, ds];
+    h0: [B, di, ds]. Chunked associative scan (memory O(B·chunk·di·ds)).
+    Returns (y [B,N,di], h_final).
+    """
+    bsz, n, di = u.shape
+    ds = a.shape[-1]
+    cs = min(chunk, n)
+    nc = -(-n // cs)
+    pad = nc * cs - n
+    up = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+    dp = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+    bp = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+    cp = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    chunks = lambda x: jnp.moveaxis(  # noqa: E731
+        x.reshape(bsz, nc, cs, x.shape[-1]), 1, 0)
+
+    def body(h, xs):
+        uc, dc_, bc, cc = xs                                  # [B, cs, *]
+        da = jnp.exp(dc_[..., None] * a[None, None])          # [B,cs,di,ds]
+        dbu = (dc_ * uc)[..., None] * bc[:, :, None, :]       # [B,cs,di,ds]
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(comb, (da, dbu), axis=1)
+        hseq = a_cum * h[:, None] + b_cum                     # [B,cs,di,ds]
+        y = jnp.einsum("bcds,bcs->bcd", hseq, cc)
+        return hseq[:, -1], y
+
+    hf, ys = jax.lax.scan(body, h0, (chunks(up), chunks(dp), chunks(bp),
+                                     chunks(cp)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, nc * cs, di)[:, :n]
+    return y + u * d_skip[None, None, :], hf
+
+
+def _pre_ssm(params, x, cfg, conv_state=None):
+    di, dt_rank, ds, _ = _dims(cfg)
+    xz = jnp.einsum("bnd,de->bne", x, params["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, new_conv = _causal_conv(xi, params["conv_w"], params["conv_b"],
+                                state=conv_state)
+    xi = jax.nn.silu(xi)
+    proj = jnp.einsum("bnd,de->bne", xi, params["x_proj"])
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bnr,rd->bnd", dt, params["dt_proj"]) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    return xi, z, delta, a, bmat, cmat, new_conv
+
+
+def apply_mamba(params, x, cfg):
+    bsz, n, d = x.shape
+    di, _, ds, _ = _dims(cfg)
+    xi, z, delta, a, bmat, cmat, _ = _pre_ssm(params, x, cfg)
+    h0 = jnp.zeros((bsz, di, ds), jnp.float32)
+    y, _ = _selective_scan(
+        xi.astype(jnp.float32), delta.astype(jnp.float32), a,
+        bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+        params["D"].astype(jnp.float32), h0=h0, chunk=cfg.chunk_size)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("bnd,de->bne", y, params["out_proj"])
+
+
+def init_mamba_state(cfg, batch: int, dtype) -> MambaState:
+    di, _, ds, dc = _dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, dc - 1, di), dtype),
+        h=jnp.zeros((batch, di, ds), jnp.float32),
+    )
+
+
+def mamba_decode(params, x_t, state: MambaState, cfg):
+    """One-token decode. x_t: [B, 1, d]."""
+    xi, z, delta, a, bmat, cmat, new_conv = _pre_ssm(
+        params, x_t, cfg, conv_state=state.conv)
+    da = jnp.exp(delta[:, 0, :, None].astype(jnp.float32) * a[None])
+    dbu = (delta * xi)[:, 0, :, None].astype(jnp.float32) \
+        * bmat[:, 0, None, :].astype(jnp.float32)
+    h = da * state.h + dbu
+    y = jnp.einsum("bds,bs->bd", h, cmat[:, 0].astype(jnp.float32))
+    y = y + xi[:, 0].astype(jnp.float32) * params["D"].astype(jnp.float32)
+    y = (y[:, None].astype(x_t.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bnd,de->bne", y, params["out_proj"])
+    return out, MambaState(conv=new_conv, h=h)

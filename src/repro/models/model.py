@@ -1,0 +1,92 @@
+"""Model registry: init / loss / decode entry points + input specs.
+
+`input_specs()` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for every model input — the dry-run lowers
+against these.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models.transformer import (
+    ModelConfig,
+    forward_lm,
+    init_lm,
+    init_lm_decode_state,
+    lm_decode_step,
+    lm_loss,
+    lm_prefill,
+)
+
+__all__ = ["init_model", "model_loss", "model_forward", "input_specs",
+           "decode_state_specs", "init_decode_state", "decode_step"]
+
+
+def _is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.encoder_layers > 0
+
+
+def init_model(key: jax.Array, cfg: ModelConfig, *, abstract: bool = False):
+    if _is_encdec(cfg):
+        return ED.init_encdec(key, cfg, abstract=abstract)
+    return init_lm(key, cfg, abstract=abstract)
+
+
+def model_loss(params, batch, cfg: ModelConfig):
+    if _is_encdec(cfg):
+        return ED.encdec_loss(params, batch, cfg)
+    return lm_loss(params, batch, cfg)
+
+
+def model_forward(params, batch, cfg: ModelConfig):
+    if _is_encdec(cfg):
+        return ED.forward_encdec(params, batch, cfg)
+    return forward_lm(params, batch["tokens"], cfg,
+                      embeddings=batch.get("embeddings"))
+
+
+def input_specs(cfg: ModelConfig, *, global_batch: int, seq_len: int,
+                kind: str = "train") -> Dict[str, Any]:
+    """ShapeDtypeStruct inputs for train_step (kind='train') or the decode
+    serve_step's per-step token inputs (kind='decode')."""
+    tok = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
+    if kind == "train":
+        specs = {"tokens": tok,
+                 "targets": jax.ShapeDtypeStruct((global_batch, seq_len),
+                                                 jnp.int32)}
+        if _is_encdec(cfg):
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (global_batch, cfg.encoder_seq, cfg.d_model),
+                cfg.adtype())
+        if cfg.family == "vlm":
+            # chameleon early fusion: VQ image tokens are ordinary vocab ids
+            # (stub frontend) — token spec already covers them.
+            pass
+        return specs
+    if kind == "decode":
+        specs = {"token": jax.ShapeDtypeStruct((global_batch,), jnp.int32)}
+        if _is_encdec(cfg):
+            specs["enc_out"] = jax.ShapeDtypeStruct(
+                (global_batch, cfg.encoder_seq, cfg.d_model), cfg.adtype())
+        return specs
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    return init_lm_decode_state(cfg, batch, max_len)
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """Shape specs of the decode state WITHOUT allocating it."""
+    return jax.eval_shape(
+        lambda: init_lm_decode_state(cfg, batch, max_len))
+
+
+def decode_step(params, state, token, cfg: ModelConfig, *, position,
+                enc_out=None):
+    return lm_decode_step(params, state, token, cfg, position=position,
+                          enc_out=enc_out)

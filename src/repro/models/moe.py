@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity dispatch, shared experts.
+
+Dispatch is index/scatter-based (NOT the [T, E, C] one-hot einsum — that
+tensor is ~10 TB/device for kimi-k2-scale configs). Per device:
+
+  1. router: softmax over experts, top-k per token, renormalized gates
+  2. position-in-expert via a masked cumulative sum, tokens over capacity
+     C = ceil(k * T * capacity_factor / E) are dropped (standard capacity
+     dropping — gradient still flows to kept slots)
+  3. scatter tokens into an [E, C, d] buffer, run all experts as a batched
+     einsum (weights [E, d, ff] sharded "experts" -> EP axis), gather back
+     and combine with gates.
+
+Aux load-balance loss (Switch-style) is returned for the trainer.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import Builder
+
+__all__ = ["init_moe", "apply_moe"]
+
+
+def init_moe(b: Builder, name: str, cfg) -> None:
+    sub = b.sub(name)
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    sub.add("router", (d, e), ("embed", "experts"), scale=0.02)
+    sub.add("wi_gate", (e, d, ff), ("experts", "embed", "ff"), fan_in=d)
+    sub.add("wi_up", (e, d, ff), ("experts", "embed", "ff"), fan_in=d)
+    sub.add("wo", (e, ff, d), ("experts", "ff", "embed"), fan_in=ff)
+    if cfg.n_shared_experts > 0:
+        sff = ff * cfg.n_shared_experts
+        sub.add("shared_wi_gate", (d, sff), ("embed", "ff"))
+        sub.add("shared_wi_up", (d, sff), ("embed", "ff"))
+        sub.add("shared_wo", (sff, d), ("ff", "embed"))
+
+
+def apply_moe(params, x, cfg, *, full_capacity: bool = False
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, N, d]. Returns (y, aux_loss).
+
+    full_capacity=True sizes buffers so NO token is ever dropped — the
+    inference (prefill/decode) mode; training uses capacity dropping."""
+    b, n, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    t = b * n
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # [T, E]
+    gates, idx = jax.lax.top_k(probs, k)                       # [T, k]
+    gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+
+    if full_capacity and t <= 4096:
+        capacity = t                 # decode/small-prefill: never drop
+    elif full_capacity:
+        # long prefill: worst-case capacity is infeasible (t ~ 1M tokens);
+        # 2x the expected load makes drops vanishingly rare at this T
+        capacity = min(t, max(1, int(2.0 * k * t / e)))
+    else:
+        capacity = max(1, int(k * t * cfg.capacity_factor / e))
+
+    # position of each (token, slot) within its expert, by token order.
+    # top_k experts are DISTINCT per token, so a [T, E] 0/1 mask suffices —
+    # never materialize [T, k, E] (≈1 GB/device at kimi-k2 scale).
+    token_ids = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k))
+    slot_mask = jnp.zeros((t, e), jnp.int32).at[token_ids, idx].add(1)
+    pos_before = jnp.cumsum(slot_mask, axis=0) - slot_mask     # tokens before t
+    pos = jnp.take_along_axis(pos_before, idx, axis=1)         # [T, k]
+    keep = pos < capacity                                      # [T, k]
+    pos_c = jnp.where(keep, pos, 0)
+
+    # scatter into expert buffers; buffer sharded E->EP ("model") and
+    # C->"data" so the per-device slice stays ~capacity/ep_size tokens.
+    from repro.sharding.rules import maybe_constraint
+    buf = jnp.zeros((e, capacity, d), xf.dtype)
+    buf = maybe_constraint(buf, "model", "data", None)
+    flat_e = idx.reshape(-1)
+    flat_p = pos_c.reshape(-1)
+    src = jnp.repeat(xf[:, None, :], k, axis=1).reshape(t * k, d)
+    src = src * keep.reshape(-1, 1).astype(src.dtype)
+    buf = buf.at[flat_e, flat_p].add(src)
+    buf = maybe_constraint(buf, "model", "data", None)
+
+    # expert FFN (batched over E; "experts" dim sharded -> expert parallel)
+    g = jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"])
+    h = jax.nn.silu(g) * u
+    y_e = jnp.einsum("ecf,efd->ecd", h, params["wo"])          # [E, C, d]
+
+    # gather back + combine
+    y_tk = y_e[flat_e, flat_p].reshape(t, k, d)
+    y = jnp.sum(
+        y_tk * (gates * keep.astype(gates.dtype))[..., None].astype(y_tk.dtype),
+        axis=1,
+    )
+
+    # shared experts (always-on dense path, DeepSeek-style)
+    if cfg.n_shared_experts > 0:
+        sg = jnp.einsum("td,df->tf", xf, params["shared_wi_gate"])
+        su = jnp.einsum("td,df->tf", xf, params["shared_wi_up"])
+        y = y + jnp.einsum("tf,fd->td", jax.nn.silu(sg) * su,
+                           params["shared_wo"])
+
+    # Switch-style load balance aux: E * Σ_e (frac_tokens_e · frac_prob_e)
+    me = jnp.mean(probs, axis=0)                               # [E]
+    counts = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    ce = counts / (t * k)
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_weight
+    return y.reshape(b, n, d).astype(x.dtype), aux

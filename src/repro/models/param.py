@@ -1,0 +1,131 @@
+"""Parameter construction with logical sharding axes (MaxText-style).
+
+Pure-JAX (no flax): params are nested dicts of arrays. A `Builder` constructs
+two parallel trees — values and logical-axis tuples — so sharding rules
+(repro.sharding) can map every parameter to a PartitionSpec without a
+separately-maintained spec tree.
+
+Logical axis vocabulary (see repro/sharding/rules.py):
+  "embed"   — model width (d_model)        -> fsdp axis for big models
+  "heads"   — attention heads              -> tensor parallel
+  "kv_heads"— kv heads (GQA)               -> tensor parallel iff divisible
+  "head_dim"— per-head dim                 -> replicated
+  "ff"      — MLP hidden                   -> tensor parallel
+  "vocab"   — embedding/logit vocab        -> tensor parallel
+  "experts" — MoE experts                  -> expert parallel
+  "layers"  — stacked scan-over-layers     -> replicated (leading axis)
+  None      — replicated
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Builder", "count_params", "tree_bytes"]
+
+
+class Builder:
+    """Collects (value, logical_axes) pairs into parallel nested dicts.
+
+    `abstract=True` builds ShapeDtypeStruct leaves (no RNG, no allocation) —
+    used by the dry-run to get shapes+axes for full-size configs.
+    """
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32,
+                 abstract: bool = False):
+        self._key = key
+        self.dtype = dtype
+        self.abstract = abstract
+        self.params: dict[str, Any] = {}
+        self.axes: dict[str, Any] = {}
+
+    def _next_key(self) -> jax.Array:
+        if self.abstract:
+            return self._key
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def sub(self, name: str) -> "Builder":
+        child = Builder(self._next_key(), self.dtype, self.abstract)
+        self.params[name] = child.params
+        self.axes[name] = child.axes
+        return child
+
+    def constant(self, name: str, value, axes) -> None:
+        """Insert a concrete constant parameter (e.g. S4D A_log init)."""
+        if self.abstract:
+            self.params[name] = jax.ShapeDtypeStruct(
+                value.shape, jnp.dtype(self.dtype))
+        else:
+            self.params[name] = value.astype(self.dtype)
+        self.axes[name] = tuple(axes)
+
+    def add(
+        self,
+        name: str,
+        shape: Sequence[int],
+        axes: Sequence[Optional[str]],
+        init: str = "normal",
+        scale: Optional[float] = None,
+        fan_in: Optional[int] = None,
+    ) -> None:
+        assert len(shape) == len(axes), (name, shape, axes)
+        if self.abstract:
+            self.params[name] = jax.ShapeDtypeStruct(
+                tuple(shape), jnp.dtype(self.dtype))
+            self.axes[name] = tuple(axes)
+            return
+        if init == "zeros":
+            val = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, self.dtype)
+        elif init == "normal":
+            if scale is None:
+                fi = fan_in if fan_in is not None else shape[0]
+                scale = 1.0 / math.sqrt(max(1, fi))
+            val = (jax.random.normal(self._next_key(), shape, jnp.float32)
+                   * scale).astype(self.dtype)
+        else:
+            raise ValueError(init)
+        self.params[name] = val
+        self.axes[name] = tuple(axes)
+
+    def stacked(self, name: str, n: int,
+                make: Callable[["Builder"], None]) -> None:
+        """Init `n` copies of a submodule stacked on a leading 'layers' axis
+        (scan-over-layers). `make` populates a prototype builder."""
+        proto = Builder(jax.random.PRNGKey(0), self.dtype,
+                        abstract=self.abstract)
+        make(proto)  # structure/axes only; values re-drawn per layer below
+
+        if self.abstract:
+            stacked = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype),
+                proto.params,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        else:
+            keys = jax.random.split(self._next_key(), n)
+
+            def init_one(k):
+                b = Builder(k, self.dtype)
+                make(b)
+                return b.params
+
+            stacked = jax.vmap(init_one)(keys)
+        self.params[name] = stacked
+        self.axes[name] = jax.tree.map(
+            lambda ax: ("layers",) + ax, proto.axes,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

@@ -1,0 +1,289 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Attention-free architecture — FAST is inapplicable here (DESIGN.md
+§Arch-applicability); built faithfully as an assigned architecture.
+
+mLSTM is evaluated CHUNKWISE (gated-linear-attention form): within a chunk
+the gate-weighted f(QKᵀ)-style block is computed directly; across chunks the
+matrix memory C (and normalizer n) are carried. All decay ratios are ≤ 1 by
+construction (cumulative log-sigmoid forget gates), input gates are
+exp-capped, so the unstabilized chunk math is safe in fp32.
+
+sLSTM has true recurrent gate connections (h_{t-1} enters the gates), so it
+is strictly sequential: lax.scan over time. It appears once per 8 blocks
+(xLSTM[7:1]), so the sequential cost is bounded.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import Builder
+
+__all__ = [
+    "init_mlstm", "apply_mlstm", "mlstm_decode", "init_mlstm_state",
+    "init_slstm", "apply_slstm", "slstm_decode", "init_slstm_state",
+    "MLSTMState", "SLSTMState",
+]
+
+_ICAP = 10.0  # input-gate exp cap (numerical guard)
+
+
+def _dims(cfg):
+    di = 2 * cfg.d_model             # proj_factor 2 (xLSTM-1.3b)
+    nh = cfg.n_heads
+    hd = di // nh
+    return di, nh, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray   # [B, H, dk, dv]
+    n: jnp.ndarray   # [B, H, dk]
+
+
+def init_mlstm(b: Builder, name: str, cfg) -> None:
+    sub = b.sub(name)
+    d = cfg.d_model
+    di, nh, hd = _dims(cfg)
+    sub.add("up_proj", (d, 2 * di), ("embed", "ff"))
+    # headwise (block-diagonal) q/k/v projections, per the xLSTM paper
+    sub.add("wq", (nh, hd, hd), ("heads", None, "head_dim"), fan_in=hd)
+    sub.add("wk", (nh, hd, hd), ("heads", None, "head_dim"), fan_in=hd)
+    sub.add("wv", (nh, hd, hd), ("heads", None, "head_dim"), fan_in=hd)
+    sub.add("wi", (di, nh), ("ff", "heads"), scale=0.02)
+    sub.add("wf", (di, nh), ("ff", "heads"), scale=0.02)
+    sub.add("bi", (nh,), ("heads",), init="zeros")
+    # positive forget bias -> long memory at init (paper init)
+    sub.constant("bf", jnp.full((nh,), 3.0, jnp.float32), ("heads",))
+    sub.add("gn_scale", (di,), ("ff",), init="ones")
+    sub.add("down_proj", (di, d), ("ff", "embed"))
+
+
+def _mlstm_gates(params, xi):
+    """xi: [B, N, di] -> (q, k, v [B,H,N,hd], log_f [B,H,N], i [B,H,N])."""
+    nh, hd = params["wq"].shape[0], params["wq"].shape[1]
+    xh = xi.reshape(xi.shape[0], xi.shape[1], nh, hd)
+    q = jnp.einsum("bnhk,hkl->bhnl", xh, params["wq"])
+    k = jnp.einsum("bnhk,hkl->bhnl", xh, params["wk"]) / math.sqrt(hd)
+    v = jnp.einsum("bnhk,hkl->bhnl", xh, params["wv"])
+    fpre = jnp.einsum("bnd,dh->bhn", xi, params["wf"]) + params["bf"][:, None]
+    ipre = jnp.einsum("bnd,dh->bhn", xi, params["wi"]) + params["bi"][:, None]
+    log_f = jax.nn.log_sigmoid(fpre.astype(jnp.float32))
+    ig = jnp.exp(jnp.minimum(ipre.astype(jnp.float32), _ICAP))
+    return q, k, v, log_f, ig
+
+
+def _mlstm_chunk_scan(q, k, v, log_f, ig, c0, n0, *, chunk):
+    """Chunked gated linear attention. q,k,v: [B,H,N,hd] (fp32)."""
+    bsz, nh, n, hd = q.shape
+    dv = v.shape[-1]
+    cs = min(chunk, n)
+    nc = -(-n // cs)
+    pad = nc * cs - n
+    pad4 = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))  # noqa
+    pad3 = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad)))          # noqa
+    ch4 = lambda x: jnp.moveaxis(                                     # noqa
+        pad4(x).reshape(bsz, nh, nc, cs, x.shape[-1]), 2, 0)
+    ch3 = lambda x: jnp.moveaxis(                                     # noqa
+        pad3(x).reshape(bsz, nh, nc, cs), 2, 0)
+
+    def body(carry, xs):
+        c_prev, n_prev = carry
+        qc, kc, vc, lfc, igc = xs
+        lcum = jnp.cumsum(lfc, axis=-1)                   # [B,H,cs] ≤ 0
+        # intra: w_ij = exp(lcum_i - lcum_j) * ig_j , j <= i  (ratio ≤ 1)
+        ratio = jnp.exp(lcum[..., :, None] - lcum[..., None, :])
+        tri = jnp.tril(jnp.ones((cs, cs), jnp.float32))
+        w = ratio * igc[..., None, :] * tri
+        s = jnp.einsum("bhik,bhjk->bhij", qc, kc) * w
+        num = jnp.einsum("bhij,bhjv->bhiv", s, vc)
+        den = jnp.einsum("bhij,bhjk,bhik->bhi", w, kc, qc)
+        # inter: scale by exp(lcum_i)
+        scale_i = jnp.exp(lcum)
+        num = num + scale_i[..., None] * jnp.einsum(
+            "bhik,bhkv->bhiv", qc, c_prev)
+        den = den + scale_i * jnp.einsum("bhik,bhk->bhi", qc, n_prev)
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # carry update: decay by total chunk forget, add chunk contributions
+        tot = lcum[..., -1:]
+        dec_j = jnp.exp(tot - lcum) * igc                  # [B,H,cs]
+        c_new = jnp.exp(tot)[..., None] * c_prev + jnp.einsum(
+            "bhjk,bhjv,bhj->bhkv", kc, vc, dec_j)
+        n_new = jnp.exp(tot) * n_prev + jnp.einsum("bhjk,bhj->bhk", kc, dec_j)
+        return (c_new, n_new), h
+
+    (cf, nf), hs = jax.lax.scan(
+        body, (c0, n0), (ch4(q), ch4(k), ch4(v), ch3(log_f), ch3(ig)))
+    h = jnp.moveaxis(hs, 0, 2).reshape(bsz, nh, nc * cs, dv)[:, :, :n]
+    return h, (cf, nf)
+
+
+def apply_mlstm_stateful(params, x, cfg, state: "MLSTMState"):
+    bsz, n, d = x.shape
+    di, nh, hd = _dims(cfg)
+    ug = jnp.einsum("bnd,de->bne", x, params["up_proj"])
+    xi, z = jnp.split(ug, 2, axis=-1)
+    q, k, v, log_f, ig = _mlstm_gates(params, xi)
+    h, (cf, nf) = _mlstm_chunk_scan(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        log_f, ig, state.c, state.n, chunk=min(cfg.chunk_size, 128))
+    h = jnp.moveaxis(h, 1, 2).reshape(bsz, n, di).astype(x.dtype)
+    # headwise group norm (scale only)
+    hn = h.reshape(bsz, n, nh, hd)
+    var = jnp.mean(jnp.square(hn.astype(jnp.float32)), axis=-1, keepdims=True)
+    hn = (hn * jax.lax.rsqrt(var + 1e-6)).reshape(bsz, n, di)
+    h = hn.astype(x.dtype) * params["gn_scale"] * jax.nn.silu(z)
+    out = jnp.einsum("bnd,de->bne", h, params["down_proj"])
+    return out, MLSTMState(c=cf, n=nf)
+
+
+def apply_mlstm(params, x, cfg):
+    return apply_mlstm_stateful(params, x, cfg,
+                                init_mlstm_state(cfg, x.shape[0]))[0]
+
+
+def init_mlstm_state(cfg, batch: int) -> MLSTMState:
+    _, nh, hd = _dims(cfg)
+    return MLSTMState(
+        c=jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, nh, hd), jnp.float32),
+    )
+
+
+def mlstm_decode(params, x_t, state: MLSTMState, cfg):
+    bsz, _, d = x_t.shape
+    di, nh, hd = _dims(cfg)
+    ug = jnp.einsum("bnd,de->bne", x_t, params["up_proj"])
+    xi, z = jnp.split(ug, 2, axis=-1)
+    q, k, v, log_f, ig = _mlstm_gates(params, xi)
+    q, k, v = (t[:, :, 0].astype(jnp.float32) for t in (q, k, v))
+    f = jnp.exp(log_f[..., 0])
+    i = ig[..., 0]
+    c = f[..., None, None] * state.c + i[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    nn = f[..., None] * state.n + i[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, c)
+    den = jnp.einsum("bhk,bhk->bh", q, nn)
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    h = h.reshape(bsz, 1, di)
+    var = jnp.mean(jnp.square(h.reshape(bsz, 1, nh, hd)), axis=-1,
+                   keepdims=True)
+    hn = (h.reshape(bsz, 1, nh, hd) * jax.lax.rsqrt(var + 1e-6)).reshape(
+        bsz, 1, di)
+    h = hn.astype(x_t.dtype) * params["gn_scale"] * jax.nn.silu(z)
+    out = jnp.einsum("bnd,de->bne", h, params["down_proj"])
+    return out, MLSTMState(c=c, n=nn)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray  # [B, di]
+    n: jnp.ndarray  # [B, di]
+    m: jnp.ndarray  # [B, di]  log-stabilizer
+    h: jnp.ndarray  # [B, di]
+
+
+def _sdims(cfg):
+    di = cfg.d_model                 # sLSTM operates at model width
+    nh = cfg.n_heads
+    return di, nh, di // nh
+
+
+def init_slstm(b: Builder, name: str, cfg) -> None:
+    sub = b.sub(name)
+    d = cfg.d_model
+    di, nh, hd = _sdims(cfg)
+    for gate in ("z", "i", "f", "o"):
+        sub.add(f"w{gate}", (d, di), ("embed", "ff"))
+        # recurrent weights: block-diagonal per head [H, hd, hd]
+        sub.add(f"r{gate}", (nh, hd, hd), ("heads", None, None), fan_in=hd)
+        sub.add(f"b{gate}", (di,), ("ff",),
+                init="zeros" if gate != "f" else "ones")
+    sub.add("gn_scale", (di,), ("ff",), init="ones")
+    sub.add("down_proj", (di, d), ("ff", "embed"))
+
+
+def _slstm_step(params, carry, x_t, nh, hd):
+    c, n, m, h = carry
+    bsz = x_t.shape[0]
+    hh = h.reshape(bsz, nh, hd)
+
+    def gate(name):
+        wx = x_t @ params[f"w{name}"]
+        rh = jnp.einsum("bhk,hkl->bhl", hh, params[f"r{name}"]).reshape(
+            bsz, nh * hd)
+        return wx + rh + params[f"b{name}"]
+
+    z = jnp.tanh(gate("z"))
+    o = jax.nn.sigmoid(gate("o"))
+    itil = gate("i").astype(jnp.float32)
+    ftil = gate("f").astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(ftil)
+    m_new = jnp.maximum(log_f + m, itil)
+    i_p = jnp.exp(itil - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * z.astype(jnp.float32)
+    n_new = f_p * n + i_p
+    h_new = (o.astype(jnp.float32) * c_new
+             / jnp.maximum(n_new, 1e-6)).astype(x_t.dtype)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def apply_slstm_stateful(params, x, cfg, state: "SLSTMState"):
+    bsz, n, d = x.shape
+    di, nh, hd = _sdims(cfg)
+    carry = (state.c, state.n, state.m, state.h)
+
+    def body(c_, x_t):
+        return _slstm_step(params, c_, x_t, nh, hd)
+
+    (cf, nf, mf, hf), hs = jax.lax.scan(body, carry, jnp.moveaxis(x, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)                       # [B, N, di]
+    var = jnp.mean(jnp.square(h.reshape(bsz, n, nh, hd).astype(jnp.float32)),
+                   axis=-1, keepdims=True)
+    hn = (h.reshape(bsz, n, nh, hd) * jax.lax.rsqrt(var + 1e-6)).reshape(
+        bsz, n, di).astype(x.dtype)
+    out = jnp.einsum("bnd,de->bne", hn * params["gn_scale"],
+                     params["down_proj"])
+    return out, SLSTMState(c=cf, n=nf, m=mf, h=hf)
+
+
+def apply_slstm(params, x, cfg):
+    return apply_slstm_stateful(
+        params, x, cfg, init_slstm_state(cfg, x.shape[0], x.dtype))[0]
+
+
+def init_slstm_state(cfg, batch: int, dtype) -> SLSTMState:
+    di, _, _ = _sdims(cfg)
+    return SLSTMState(
+        c=jnp.zeros((batch, di), jnp.float32),
+        n=jnp.zeros((batch, di), jnp.float32),
+        m=jnp.full((batch, di), -1e9, jnp.float32),
+        h=jnp.zeros((batch, di), dtype),
+    )
+
+
+def slstm_decode(params, x_t, state: SLSTMState, cfg):
+    bsz, _, d = x_t.shape
+    di, nh, hd = _sdims(cfg)
+    carry = (state.c, state.n, state.m, state.h)
+    (c, n, m, h), h_out = _slstm_step(params, carry, x_t[:, 0], nh, hd)
+    var = jnp.mean(jnp.square(h_out.reshape(bsz, nh, hd).astype(jnp.float32)),
+                   axis=-1, keepdims=True)
+    hn = (h_out.reshape(bsz, nh, hd) * jax.lax.rsqrt(var + 1e-6)).reshape(
+        bsz, di).astype(x_t.dtype)
+    out = jnp.einsum("bd,de->be", hn * params["gn_scale"],
+                     params["down_proj"])[:, None]
+    return out, SLSTMState(c=c, n=n, m=m, h=h)

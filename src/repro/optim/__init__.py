@@ -1,0 +1,25 @@
+"""Optimizers + schedules + gradient utilities (pure JAX, no optax).
+
+Features used at scale:
+  * AdamW with optional fp32 master params (bf16 param trees) and optional
+    int8-quantized first moment (per-block absmax scaling + error feedback)
+    — halves optimizer HBM for the 405B/1T archs.
+  * Lion (2 bytes/param state) for the largest configs.
+  * Global-norm clipping, warmup+cosine schedule.
+  * Gradient compression with error feedback (bf16/int8) — composes with
+    data-parallel training; when activations are bf16 the backward psum is
+    already bf16 (comm compression for free), this adds the error-feedback
+    correction loop.
+"""
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    adamw,
+    lion,
+    make_optimizer,
+)
+from repro.optim.schedules import warmup_cosine  # noqa: F401
+from repro.optim.grad_utils import (  # noqa: F401
+    clip_by_global_norm,
+    global_norm,
+    compress_decompress,
+)

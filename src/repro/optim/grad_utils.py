@@ -1,0 +1,59 @@
+"""Gradient utilities: global-norm clipping + compression w/ error feedback.
+
+Compression note (distributed optimization): under pjit, the data-parallel
+gradient reduction happens inside XLA's backward pass at the activations'
+dtype — running the model with bf16 activations already halves all-reduce
+bytes. `compress_decompress` adds an int8 (or bf16) error-feedback stage for
+optimizer-state-side compression experiments: the quantization residual is
+carried to the next step so the long-run update is unbiased.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["global_norm", "clip_by_global_norm", "compress_decompress"]
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), norm
+
+
+def _quant(x, mode: str):
+    if mode == "bf16":
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    if mode == "int8":
+        amax = jnp.max(jnp.abs(x)) + 1e-12
+        q = jnp.clip(jnp.round(x / amax * 127.0), -127, 127)
+        return q * amax / 127.0
+    raise ValueError(mode)
+
+
+def compress_decompress(grads, error_state, mode: str = "int8"
+                        ) -> Tuple[Any, Any]:
+    """Error-feedback compression: g' = Q(g + e); e' = (g + e) - g'."""
+    if error_state is None:
+        error_state = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q = _quant(corrected, mode)
+        return q.astype(g.dtype), corrected - q
+
+    out = jax.tree.map(one, grads, error_state)
+    g_new = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    e_new = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return g_new, e_new

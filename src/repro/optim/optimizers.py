@@ -1,0 +1,176 @@
+"""AdamW and Lion with big-model state options (pure JAX).
+
+State layouts (chosen per arch size, see launch/train.py):
+  adamw:            m fp32, v fp32 (+ master fp32 if params are bf16)
+  adamw_int8:       m int8 (per-block absmax) + eps-state, v fp32
+  lion:             m bf16 — 2 bytes/param, for the 1T config
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptState", "adamw", "lion", "make_optimizer"]
+
+_QBLOCK = 256
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any           # None for lion
+    master: Any      # fp32 master params (None if params already fp32)
+
+
+def _q8(x: jnp.ndarray):
+    """Per-block absmax int8 quantization along the last axis."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % _QBLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _size(shape):
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def _dq8(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    return flat[: _size(shape)].reshape(shape)
+
+
+def _wd_mask(path: tuple) -> bool:
+    """No weight decay on norms/biases/scalars."""
+    name = "/".join(str(getattr(p, "key", p)) for p in path)
+    skip = ("scale", "bias", "bq", "bk", "bv", "bi", "bf", "bz", "bo",
+            "dt_bias", "A_log", "D")
+    return not any(name.endswith(s) for s in skip)
+
+
+def adamw(lr: Callable[[jnp.ndarray], jnp.ndarray], *, b1=0.9, b2=0.95,
+          eps=1e-8, weight_decay=0.1, int8_m: bool = False,
+          master_fp32: bool = True):
+    """Returns (init_fn, update_fn). update(grads, state, params)."""
+
+    def init(params):
+        def m_like(x):
+            if int8_m:
+                q, s = _q8(jnp.zeros(x.shape, jnp.float32))
+                return {"q": q, "s": s}
+            return jnp.zeros(x.shape, jnp.float32)
+
+        m = jax.tree.map(m_like, params)
+        v = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        master = None
+        if master_fp32 and any(x.dtype != jnp.float32
+                               for x in jax.tree.leaves(params)):
+            master = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), m, v, master)
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = lr(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        ref = state.master if state.master is not None else params
+
+        def upd(path, g, m, v, p):
+            g = g.astype(jnp.float32)
+            if int8_m:
+                m_f = _dq8(m["q"], m["s"], g.shape)
+            else:
+                m_f = m
+            m_new = b1 * m_f + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m_new / b1c
+            vhat = v_new / b2c
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay > 0 and _wd_mask(path):
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr_t * delta
+            if int8_m:
+                q, s = _q8(m_new)
+                m_out = {"q": q, "s": s}
+            else:
+                m_out = m_new
+            return m_out, v_new, p_new
+
+        flat = jax.tree_util.tree_flatten_with_path(grads)[0]
+        paths = [p for p, _ in flat]
+        treedef = jax.tree.structure(grads)
+        g_l = [g for _, g in flat]
+        m_l = jax.tree.leaves(state.m,
+                              is_leaf=lambda x: isinstance(x, dict)
+                              and "q" in x) if int8_m else jax.tree.leaves(
+            state.m)
+        v_l = jax.tree.leaves(state.v)
+        p_l = jax.tree.leaves(ref)
+        outs = [upd(path, g, m, v, p)
+                for path, g, m, v, p in zip(paths, g_l, m_l, v_l, p_l)]
+        m_new = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        v_new = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        p32 = jax.tree.unflatten(treedef, [o[2] for o in outs])
+        if state.master is not None:
+            new_params = jax.tree.map(
+                lambda p_old, p_new_: p_new_.astype(p_old.dtype), params, p32)
+            master = p32
+        else:
+            new_params = p32
+            master = None
+        return new_params, OptState(step, m_new, v_new, master)
+
+    return init, update
+
+
+def lion(lr: Callable[[jnp.ndarray], jnp.ndarray], *, b1=0.9, b2=0.99,
+         weight_decay=0.1):
+    """Lion: sign-momentum, 2-bytes/param state (bf16 momentum)."""
+
+    def init(params):
+        m = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.bfloat16), params)
+        return OptState(jnp.zeros((), jnp.int32), m, None, None)
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = lr(step)
+
+        def upd(path, g, m, p):
+            g = g.astype(jnp.float32)
+            m_f = m.astype(jnp.float32)
+            u = jnp.sign(b1 * m_f + (1 - b1) * g)
+            if weight_decay > 0 and _wd_mask(path):
+                u = u + weight_decay * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            m_new = (b2 * m_f + (1 - b2) * g).astype(jnp.bfloat16)
+            return m_new, p_new
+
+        flat = jax.tree_util.tree_flatten_with_path(grads)[0]
+        paths = [p for p, _ in flat]
+        treedef = jax.tree.structure(grads)
+        outs = [upd(path, g, m, p) for (path, g), m, p in
+                zip(flat, jax.tree.leaves(state.m), jax.tree.leaves(params))]
+        m_new = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_params = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return new_params, OptState(step, m_new, None, None)
+
+    return init, update
+
+
+def make_optimizer(name: str, lr_fn, **kw):
+    if name == "adamw":
+        return adamw(lr_fn, **kw)
+    if name == "adamw_int8":
+        return adamw(lr_fn, int8_m=True, **kw)
+    if name == "lion":
+        return lion(lr_fn, **kw)
+    raise ValueError(name)

@@ -1,0 +1,8 @@
+"""Sharding: logical-axis rules -> PartitionSpecs (DP/FSDP/TP/EP/SP)."""
+from repro.sharding.rules import (  # noqa: F401
+    DEFAULT_RULES,
+    batch_spec,
+    decode_state_shardings,
+    param_shardings,
+    spec_for,
+)

@@ -1,0 +1,198 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every parameter carries a tuple of logical axis names (repro.models.param);
+`spec_for` maps them to a PartitionSpec against the active mesh with
+divisibility fallback: if a mesh-axis product does not divide the dim (e.g.
+kv_heads=8 on model=16, or kv=1 MQA), the dim falls back to fewer axes or
+replication — never an invalid spec.
+
+Parallelism map (single pod (data=16, model=16); multi-pod adds "pod"):
+  DP    batch            -> ("pod", "data")
+  FSDP  weights' embed    -> "data"  (ZeRO-3 within pod; pods replicate,
+                                      optimizer state can add "pod")
+  TP    heads/ff/vocab    -> "model"
+  EP    experts           -> "model"
+  SP    long-context decode state feature dims -> ("data","model") when the
+        batch can't use "data" (batch=1 long_500k)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["DEFAULT_RULES", "spec_for", "param_shardings", "batch_spec",
+           "decode_state_shardings", "maybe_constraint"]
+
+
+def maybe_constraint(x, *want_axes):
+    """with_sharding_constraint that degrades gracefully: applies only the
+    axes present in the active mesh AND dividing the dim; no-op without a
+    mesh (smoke tests on 1 device)."""
+    mesh = None
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        pass
+    if mesh is None or not mesh.axis_names:
+        # `with mesh:` sets the legacy thread-resources env, not the
+        # abstract mesh — fall back to it so constraints apply there too
+        try:
+            from jax._src import mesh as mesh_lib
+            mesh = mesh_lib.thread_resources.env.physical_mesh
+        except Exception:
+            return x
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        return x
+    used: set = set()
+    entries = []
+    for dim, cand in enumerate(want_axes):
+        if cand is None:
+            entries.append(None)
+            continue
+        cands = cand if isinstance(cand, tuple) else (cand,)
+        chosen = []
+        prod = 1
+        for a in cands:
+            if a in mesh.axis_names and a not in used \
+                    and x.shape[dim] % (prod * mesh.shape[a]) == 0:
+                chosen.append(a)
+                prod *= mesh.shape[a]
+        used.update(chosen)
+        entries.append(None if not chosen
+                       else (chosen[0] if len(chosen) == 1
+                             else tuple(chosen)))
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+DEFAULT_RULES = {
+    "embed": ("data",),       # FSDP/ZeRO-3 for weight matrices
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "layers": (),
+}
+
+NO_FSDP_RULES = {**DEFAULT_RULES, "embed": ()}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def spec_for(axes: tuple, shape: tuple, mesh: Mesh,
+             rules: Optional[dict] = None) -> P:
+    rules = rules or DEFAULT_RULES
+    used: set = set()
+    out = []
+    for logical, size in zip(axes, shape):
+        if logical is None:
+            out.append(None)
+            continue
+        want = [a for a in rules.get(logical, ()) if a not in used
+                and a in mesh.axis_names]
+        # greedy prefix that divides the dim size
+        chosen = []
+        prod = 1
+        for a in want:
+            if size % (prod * _axis_size(mesh, a)) == 0:
+                chosen.append(a)
+                prod *= _axis_size(mesh, a)
+        if not chosen:
+            out.append(None)
+        elif len(chosen) == 1:
+            out.append(chosen[0])
+            used.add(chosen[0])
+        else:
+            out.append(tuple(chosen))
+            used.update(chosen)
+    return P(*out)
+
+
+def param_shardings(axes_tree, shape_tree, mesh: Mesh,
+                    rules: Optional[dict] = None):
+    """Tree of NamedSharding matching a param (or same-shaped state) tree."""
+    is_axes_leaf = lambda x: isinstance(x, tuple)  # noqa: E731
+
+    def one(axes, leaf):
+        return NamedSharding(mesh, spec_for(axes, leaf.shape, mesh, rules))
+
+    return jax.tree.map(one, axes_tree, shape_tree, is_leaf=is_axes_leaf)
+
+
+def batch_spec(mesh: Mesh, *, batch_size: int) -> P:
+    """Batch-dim sharding: as much DP as divides the global batch."""
+    axes = []
+    prod = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names and batch_size % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    if not axes:
+        return P(None)
+    return P(tuple(axes) if len(axes) > 1 else axes[0])
+
+
+def _dim_spec(size: int, mesh: Mesh, prefer: list, used: set):
+    """Greedy: shard `size` over the first unused axes that divide it."""
+    chosen = []
+    prod = 1
+    for a in prefer:
+        if a in mesh.axis_names and a not in used \
+                and size % (prod * mesh.shape[a]) == 0:
+            chosen.append(a)
+            prod *= mesh.shape[a]
+    for a in chosen:
+        used.add(a)
+    if not chosen:
+        return None
+    return chosen[0] if len(chosen) == 1 else tuple(chosen)
+
+
+def decode_state_shardings(state_shapes, mesh: Mesh, *, batch: int):
+    """Shard a decode-state tree (KV caches / fastmax moments / ssm states).
+
+    Strategy per leaf [B, ...rest]: batch -> (pod, data) when divisible;
+    then the LARGEST remaining dims -> remaining mesh axes (model first).
+    This realizes: moment-feature TP for fastmax (D or D^2 over "model"),
+    sequence-sharded KV caches (N over "model"), and full feature sharding
+    ("data"+"model") for batch=1 long-context decode.
+    """
+    def one(leaf):
+        shape = leaf.shape
+        if not shape:
+            return NamedSharding(mesh, P())
+        used: set = set()
+        out = []
+        # dim 0 = batch
+        b_axes = []
+        prod = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names and shape[0] % (prod * mesh.shape[a]) == 0 \
+                    and shape[0] > 1:
+                b_axes.append(a)
+                prod *= mesh.shape[a]
+        for a in b_axes:
+            used.add(a)
+        out.append(None if not b_axes
+                   else (b_axes[0] if len(b_axes) == 1 else tuple(b_axes)))
+        # remaining dims: LAST dim first (fastmax moments combine locally
+        # when the Dv dim is sharded; the m-dim gets sliced by the m-block
+        # loop and must stay unsharded), then largest remaining
+        order = sorted(range(1, len(shape)),
+                       key=lambda i: (0 if i == len(shape) - 1 else 1,
+                                      -shape[i]))
+        specs = {i: None for i in order}
+        for i in order:
+            specs[i] = _dim_spec(shape[i], mesh,
+                                 ["model", "data", "pod"], used)
+        out.extend(specs[i] for i in range(1, len(shape)))
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree.map(one, state_shapes)

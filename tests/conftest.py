@@ -1,0 +1,29 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see 1 device; only the dry-run (and the subprocess sharding tests)
+force host platform device counts."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64():
+    # kernels/core are validated in f64 where exactness matters; individual
+    # tests opt in via the helpers below rather than globally.
+    yield
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_qkv(rng, b, hq, hkv, n, d, dv, dtype=np.float32, normalized=False):
+    import jax.numpy as jnp
+    from repro.core.ref import normalize_qk
+    q = jnp.asarray(rng.normal(size=(b, hq, n, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, n, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, n, dv)), dtype)
+    if normalized:
+        q, k = normalize_qk(q), normalize_qk(k)
+    return q, k, v

@@ -1,0 +1,106 @@
+"""Checkpointing + fault-tolerance behaviour."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.ft import StragglerMonitor, run_with_restarts
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+        "b": {"scale": jnp.asarray(rng.normal(size=(4,)), jnp.bfloat16)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 100, t, extra={"note": "x"})
+    restored, step, extra = load_checkpoint(str(tmp_path), t)
+    assert step == 100 and extra["note"] == "x"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_atomicity_partial_save_ignored(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    # simulate a crashed later save: tmp dir exists but LATEST not updated
+    os.makedirs(tmp_path / ".tmp_step_00000002/arrays", exist_ok=True)
+    _, step, _ = load_checkpoint(str(tmp_path), t)
+    assert step == 1
+
+
+def test_manager_async_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, t, block=False)
+    mgr.wait()
+    tags = sorted(x for x in os.listdir(tmp_path) if x.startswith("step_"))
+    assert tags == ["step_00000003", "step_00000004"]
+    assert mgr.latest_step() == 4
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Checkpoint saved unsharded restores under a different 'mesh' (here:
+    explicit device_put shardings on 1 device — the mesh-agnostic path)."""
+    t = _tree()
+    save_checkpoint(str(tmp_path), 5, t)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = jax.tree.map(
+        lambda _: jax.NamedSharding(mesh, jax.sharding.PartitionSpec()), t)
+    restored, step, _ = load_checkpoint(str(tmp_path), t, shardings=sh)
+    assert step == 5
+    assert all(x.sharding is not None for x in jax.tree.leaves(restored))
+
+
+def test_run_with_restarts_recovers(tmp_path):
+    """Injected worker failure: supervisor restores from ckpt and finishes."""
+    mgr = CheckpointManager(str(tmp_path))
+    calls = {"n": 0}
+
+    def make_state():
+        params = {"w": jnp.zeros((2,))}
+        start = 0
+        if mgr.latest_step() is not None:
+            (params,), start, _ = mgr.restore((params,))
+        return params, start
+
+    def run(params, start):
+        calls["n"] += 1
+        for step in range(start, 10):
+            params = {"w": params["w"] + 1.0}
+            mgr.save(step + 1, (params,))
+            if calls["n"] == 1 and step == 4:
+                raise RuntimeError("node lost")
+        return int(params["w"][0])
+
+    total = run_with_restarts(make_state, run, max_restarts=3)
+    assert total == 10          # 5 steps before crash + resumed 5..9
+    assert calls["n"] == 2
+
+
+def test_straggler_monitor_flags_slow_steps():
+    mon = StragglerMonitor(threshold=2.0, patience=2)
+    for _ in range(10):
+        mon.start_step()
+        mon._t0 -= 0.01          # simulate 10ms steps
+        mon.end_step()
+    assert not mon.straggling
+    for _ in range(2):
+        mon.start_step()
+        mon._t0 -= 0.1           # 100ms — 10x median
+        mon.end_step()
+    assert mon.straggling
+    assert mon.stats()["median_s"] > 0
