@@ -1,0 +1,21 @@
+PY := PYTHONPATH=src python
+
+.PHONY: test test-fast test-attention bench
+
+# full tier-1 suite (everything, incl. multi-minute subprocess compiles)
+test:
+	$(PY) -m pytest -x -q
+
+# fast verify loop: excludes everything marked `slow` (the ~8-minute
+# sharding/dryrun subprocess compiles, e2e driver runs, per-arch
+# integration sweeps). ~2 min on a 1-CPU container, dominated by the f64
+# operator-equivalence sweeps; the excluded tests still run under `test`.
+test-fast:
+	$(PY) -m pytest -q -m "tier1 and not slow"
+
+# just the attention-operator API (spec/registry/dispatch/decode protocol)
+test-attention:
+	$(PY) -m pytest -q tests/test_attention_api.py
+
+bench:
+	$(PY) -m benchmarks.run --quick

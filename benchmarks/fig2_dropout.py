@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row
-from repro.core.fastmax import fastmax_rowwise
+from repro.attention import AttentionSpec, attention
 from repro.core.ref import fastmax_attention_matrix_ref
 
 
@@ -38,11 +38,12 @@ def _apply(params, toks, *, mode, rate, rng_key, train):
         a = a * keep / (1 - rate)
         o = jnp.einsum("bhnm,bhme->bhne", a, v)
     else:
-        o = fastmax_rowwise(
-            q, k, v, p=2, causal=False,
+        spec = AttentionSpec(
+            family="fastmax", p=2, impl="rowwise",
             dropout_rate=rate if train and mode != "standard" else 0.0,
-            dropout_mode=mode if mode != "standard" else "quadratic",
-            dropout_rng=rng_key if train else None)
+            dropout_mode=mode if mode != "standard" else "quadratic")
+        o = attention(q, k, v, spec, causal=False,
+                      rng=rng_key if train else None)
     pooled = o.mean(axis=(1, 2))
     return pooled @ params["head"]
 

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, time_fn
-from repro.core import fastmax_attention, softmax_attention
+from repro.attention import AttentionSpec, attention
 
 
 def run(quick: bool = True):
@@ -27,12 +27,9 @@ def run(quick: bool = True):
             k = jnp.asarray(rng.normal(size=(B, H, n, d)), jnp.float32)
             v = jnp.asarray(rng.normal(size=(B, H, n, d)), jnp.float32)
             fns = {
-                "softmax": jax.jit(functools.partial(
-                    softmax_attention, causal=True)),
-                "fastmax1": jax.jit(functools.partial(
-                    fastmax_attention, p=1, causal=True, impl="chunked")),
-                "fastmax2": jax.jit(functools.partial(
-                    fastmax_attention, p=2, causal=True, impl="chunked")),
+                name: jax.jit(functools.partial(
+                    attention, spec=AttentionSpec.parse(name), causal=True))
+                for name in ("softmax", "fastmax1", "fastmax2")
             }
             for name, fn in fns.items():
                 t = time_fn(fn, q, k, v, warmup=1, iters=3)

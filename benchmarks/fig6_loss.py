@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row
+from repro.attention import AttentionSpec
 from repro.configs import get_smoke_config
 from repro.data import SyntheticLM
 from repro.launch.steps import make_train_step, pick_optimizer
@@ -22,7 +23,7 @@ def run(quick: bool = True):
     seq = 256 if quick else 1024
     for backend in ("softmax", "fastmax2", "fastmax1"):
         cfg = dataclasses.replace(get_smoke_config("qwen2.5-32b"),
-                                  attn_backend=backend)
+                                  attn=AttentionSpec.parse(backend))
         params, _ = init_model(jax.random.PRNGKey(1), cfg)
         _, opt = pick_optimizer(cfg, 1e6, lr=3e-3, total_steps=steps)
         opt_state = opt[0](params)

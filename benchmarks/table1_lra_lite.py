@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row
+from repro.attention import AttentionSpec
 from repro.configs import get_smoke_config
 from repro.launch.steps import pick_optimizer
 from repro.models import init_model
@@ -92,7 +93,7 @@ TASKS = {
 
 def _train_classifier(backend, xtr, ytr, xte, yte, n_classes, steps, seed=0):
     cfg = dataclasses.replace(
-        get_smoke_config("qwen2.5-32b"), attn_backend=backend,
+        get_smoke_config("qwen2.5-32b"), attn=AttentionSpec.parse(backend),
         vocab_size=int(xtr.max()) + 1, n_layers=2, d_model=64, n_heads=4,
         n_kv_heads=4, head_dim=16, d_ff=128, chunk_size=64)
     params, _ = init_model(jax.random.PRNGKey(seed), cfg)

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, time_fn
+from repro.attention import AttentionSpec
 from repro.configs import get_smoke_config
 from repro.launch.steps import make_train_step, pick_optimizer
 from repro.models import init_model
@@ -28,7 +29,8 @@ def run(quick: bool = True):
         for backend in ("softmax", "fastmax2", "fastmax1"):
             cfg = dataclasses.replace(
                 get_smoke_config("qwen2.5-32b"),
-                attn_backend=backend, n_layers=2, d_model=64, n_heads=2,
+                attn=AttentionSpec.parse(backend), n_layers=2, d_model=64,
+                n_heads=2,
                 n_kv_heads=2, head_dim=32, d_ff=128, vocab_size=256,
                 chunk_size=128)
             params, _ = init_model(jax.random.PRNGKey(0), cfg)

@@ -10,31 +10,34 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (fastmax_attention, fastmax_decode_step,
-                        fastmax_prefill, softmax_attention)
+from repro.attention import AttentionSpec, attention, init_state, prefill, step
 
-print("== 1. drop-in attention ==")
+print("== 1. drop-in attention (one dispatcher, spec picks the operator) ==")
 rng = np.random.default_rng(0)
 B, H, N, D = 2, 4, 256, 32
 q = jnp.asarray(rng.normal(size=(B, H, N, D)), jnp.float32)
 k = jnp.asarray(rng.normal(size=(B, H, N, D)), jnp.float32)
 v = jnp.asarray(rng.normal(size=(B, H, N, D)), jnp.float32)
 
-o_fast = fastmax_attention(q, k, v, p=2, causal=True)   # O(N D^3)
-o_soft = softmax_attention(q, k, v, causal=True)        # O(N^2 D)
+fast = AttentionSpec(family="fastmax", p=2)             # O(N D^3)
+soft = AttentionSpec(family="softmax")                  # O(N^2 D)
+o_fast = attention(q, k, v, fast, causal=True)
+o_soft = attention(q, k, v, soft, causal=True)
 print(f"fastmax out {o_fast.shape}, softmax out {o_soft.shape} — "
       f"different metrics, same interface")
 
-print("== 2. constant-size decode state ==")
-o_pre, moments = fastmax_prefill(q, k, v, p=2)
-state_bytes = sum(x.size * x.dtype.itemsize for x in moments)
+print("== 2. constant-size decode state (unified protocol) ==")
+state = init_state(fast, batch=B, n_kv_heads=H, q_head_dim=D, v_head_dim=D,
+                   max_len=N + 8)
+o_pre, state = prefill(q, k, v, fast, state=state)
+state_bytes = sum(x.size * x.dtype.itemsize for x in state.moments)
 kv_bytes = 2 * B * H * N * D * 4
 print(f"fastmax state: {state_bytes/1e6:.2f} MB (CONSTANT in context); "
       f"KV cache at N={N}: {kv_bytes/1e6:.2f} MB (grows with N)")
 q1 = jnp.asarray(rng.normal(size=(B, H, 1, D)), jnp.float32)
 k1 = jnp.asarray(rng.normal(size=(B, H, 1, D)), jnp.float32)
 v1 = jnp.asarray(rng.normal(size=(B, H, 1, D)), jnp.float32)
-o1, moments = fastmax_decode_step(moments, q1, k1, v1, p=2)
+o1, state = step(state, q1, k1, v1, fast)
 print(f"decoded one token: {o1.shape}")
 
 print("== 3. train a tiny fastmax LM ==")

@@ -1,0 +1,56 @@
+"""repro.attention — the unified attention-operator API.
+
+One typed surface for every attention variant in the repo:
+
+  * `AttentionSpec`   — frozen description of the operator (family, p, impl,
+                        chunking, normalization, dropout, eps).
+  * `attention(...)`  — the single dispatcher every model / serving /
+                        benchmark path calls.
+  * registry          — backends (`softmax`, `fastmax-oracle`,
+                        `fastmax-rowwise`, `fastmax-chunked`,
+                        `fastmax-kernel`) declare capabilities; capability
+                        misses route explicitly (and are logged) instead of
+                        falling back silently.
+  * decode protocol   — `init_state` / `prefill` / `step` over the union
+                        `AttnState` (KV cache for softmax, constant-size
+                        moments for fastmax).
+
+See docs/attention_api.md for the model and the migration table from the
+retired `attn_backend`/`attn_impl` string pair.
+"""
+from repro.attention.api import attention, feature_shard_flag  # noqa: F401
+from repro.attention.registry import (  # noqa: F401
+    Backend,
+    Capabilities,
+    UnsupportedCapabilityError,
+    get_backend,
+    list_backends,
+    register,
+    resolve,
+)
+from repro.attention.spec import AttentionSpec  # noqa: F401
+from repro.attention.state import (  # noqa: F401
+    AttnState,
+    KVCache,
+    init_state,
+    prefill,
+    step,
+)
+
+__all__ = [
+    "AttentionSpec",
+    "attention",
+    "feature_shard_flag",
+    "Backend",
+    "Capabilities",
+    "UnsupportedCapabilityError",
+    "get_backend",
+    "list_backends",
+    "register",
+    "resolve",
+    "AttnState",
+    "KVCache",
+    "init_state",
+    "prefill",
+    "step",
+]

@@ -1,0 +1,64 @@
+"""`attention(q, k, v, spec, ...)` — the single attention entry point.
+
+Every model / serving / benchmark path computes attention through this
+dispatcher: it resolves the spec's backend against the call's requirements
+(capability-based routing, logged), derives cross-cutting flags (moment
+feature-sharding under tensor parallelism), and invokes the backend.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.attention.registry import resolve
+from repro.attention.spec import AttentionSpec
+
+__all__ = ["attention", "feature_shard_flag"]
+
+
+def feature_shard_flag(hkv: int) -> bool:
+    """True when KV heads do NOT divide the 'model' axis of the active mesh
+    (GQA/MQA at TP degree > Hkv): the kv moment update would replicate
+    TP-ways, so fastmax switches to token-sharded updates (partial moments
+    + one small psum per chunk)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            from jax._src import mesh as mesh_lib
+            mesh = mesh_lib.thread_resources.env.physical_mesh
+    except Exception:
+        return False
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return False
+    return hkv % mesh.shape["model"] != 0
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    spec: Optional[AttentionSpec] = None,
+    *,
+    causal: bool = False,
+    kv_mask: Optional[jnp.ndarray] = None,
+    rng: Optional[jax.Array] = None,
+    strict: bool = False,
+) -> jnp.ndarray:
+    """Compute attention per `spec`. q:[B,Hq,N,D]; k,v:[B,Hkv,M,*].
+
+    `kv_mask` ([B,Hkv,M], 1=valid) exactly removes padding keys. `rng`
+    enables the spec's dropout (training only). `strict=True` raises on any
+    capability miss instead of routing to a capable backend.
+    """
+    if spec is None:
+        spec = AttentionSpec()
+    dropout = spec.dropout_rate > 0.0 and rng is not None
+    backend = resolve(
+        spec, causal=causal, dropout=dropout,
+        kv_mask=kv_mask is not None, gqa=q.shape[1] != k.shape[1],
+        strict=strict)
+    fs = backend.caps.feature_shard and feature_shard_flag(k.shape[1])
+    return backend.fn(q, k, v, spec, causal=causal, kv_mask=kv_mask,
+                      rng=rng, feature_shard=fs)

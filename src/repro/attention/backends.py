@@ -1,0 +1,142 @@
+"""Built-in attention backends.
+
+Importing this module registers:
+
+  softmax          — paper baseline (Eqs. 1-4), O(N^2), KV-cache decode.
+  fastmax-oracle   — O(N^2) fastmax reference (tests/validation only).
+  fastmax-rowwise  — the paper's own schedule; the only backend with the
+                     Fig. 2 factorized dropout variants.
+  fastmax-chunked  — TPU-native chunked prefix scan (production default);
+                     exact kv masking, feature-TP, §2.5 custom backward.
+  fastmax-kernel   — Pallas TPU kernels; interprets off-TPU.
+
+All fns share one signature:
+  fn(q, k, v, spec, *, causal, kv_mask, rng, feature_shard) -> o
+with q:[B,Hq,N,D], k/v:[B,Hkv,M,*], Hq % Hkv == 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.attention.registry import Backend, Capabilities, register
+from repro.attention.spec import AttentionSpec
+
+__all__ = []  # import for side effect (registration)
+
+
+def _softmax_fn(q, k, v, spec: AttentionSpec, *, causal, kv_mask, rng,
+                feature_shard):
+    from repro.core.softmax import softmax_attention
+
+    del spec, rng, feature_shard
+    # softmax_attention is natively GQA-aware (groups q per kv head); no
+    # Hq-broadcast copies of k/v. kv_mask is per-kv-head: [B, Hkv|1, M].
+    if kv_mask is not None and kv_mask.shape[1] not in (1, k.shape[1]):
+        raise ValueError(
+            f"kv_mask heads {kv_mask.shape[1]} must be 1 or Hkv="
+            f"{k.shape[1]}")
+    return softmax_attention(q, k, v, causal=causal, kv_mask=kv_mask)
+
+
+def _oracle_fn(q, k, v, spec: AttentionSpec, *, causal, kv_mask, rng,
+               feature_shard):
+    from repro.core.fastmax import _group_queries, _ungroup
+    from repro.core.ref import fastmax_attention_ref
+
+    del kv_mask, rng, feature_shard
+    hkv = k.shape[1]
+    qg = _group_queries(q, hkv)
+    o = jax.vmap(
+        lambda qq: fastmax_attention_ref(
+            qq, k, v, p=spec.p, causal=causal, normalize=spec.normalize,
+            denom_eps=spec.denom_eps),
+        in_axes=2, out_axes=2,
+    )(qg)
+    return _ungroup(o)
+
+
+def _rowwise_fn(q, k, v, spec: AttentionSpec, *, causal, kv_mask, rng,
+                feature_shard):
+    from repro.core.fastmax import fastmax_rowwise
+
+    del kv_mask, feature_shard
+    if not spec.normalize:
+        raise ValueError("fastmax-rowwise always normalizes (paper schedule)")
+    return fastmax_rowwise(
+        q, k, v, p=spec.p, causal=causal, denom_eps=spec.denom_eps,
+        dropout_rate=spec.dropout_rate if rng is not None else 0.0,
+        dropout_mode=spec.dropout_mode, dropout_rng=rng)
+
+
+def _chunked_fn(q, k, v, spec: AttentionSpec, *, causal, kv_mask, rng,
+                feature_shard):
+    from repro.core.fastmax import (fastmax_causal_chunked, fastmax_noncausal,
+                                    normalize_qk)
+
+    del rng
+    spec = spec.resolved()
+    qh = normalize_qk(q) if spec.normalize else q
+    kh = normalize_qk(k) if spec.normalize else k
+    if causal:
+        return fastmax_causal_chunked(
+            qh, kh, v, p=spec.p, chunk_size=spec.chunk_size, kv_mask=kv_mask,
+            denom_eps=spec.denom_eps, custom_grad=spec.custom_grad,
+            feature_shard=feature_shard)
+    return fastmax_noncausal(
+        qh, kh, v, p=spec.p, kv_mask=kv_mask, denom_eps=spec.denom_eps,
+        chunk_size=max(spec.chunk_size, 512), feature_shard=feature_shard)
+
+
+def _kernel_fn(q, k, v, spec: AttentionSpec, *, causal, kv_mask, rng,
+               feature_shard):
+    from repro.core.fastmax import normalize_qk
+    from repro.kernels import ops as kernel_ops
+
+    del kv_mask, rng, feature_shard
+    spec = spec.resolved()
+    qh = normalize_qk(q) if spec.normalize else q
+    kh = normalize_qk(k) if spec.normalize else k
+    return kernel_ops.fastmax(qh, kh, v, p=spec.p, causal=causal,
+                              chunk_size=spec.chunk_size,
+                              denom_eps=spec.denom_eps)
+
+
+register(Backend(
+    name="softmax",
+    family="softmax",
+    caps=Capabilities(decode=True, kv_mask=True),
+    fn=_softmax_fn,
+))
+
+register(Backend(
+    name="fastmax-oracle",
+    family="fastmax",
+    caps=Capabilities(),
+    fn=_oracle_fn,
+))
+
+register(Backend(
+    name="fastmax-rowwise",
+    family="fastmax",
+    caps=Capabilities(dropout=True),
+    fn=_rowwise_fn,
+))
+
+register(Backend(
+    name="fastmax-chunked",
+    family="fastmax",
+    caps=Capabilities(decode=True, kv_mask=True, feature_shard=True,
+                      custom_grad=True),
+    fn=_chunked_fn,
+    fallback="fastmax-rowwise",   # dropout lives on the explicit-phi path
+))
+
+register(Backend(
+    name="fastmax-kernel",
+    family="fastmax",
+    caps=Capabilities(decode=True, custom_grad=True, platforms=("tpu",),
+                      interpretable=True),
+    fn=_kernel_fn,
+    fallback="fastmax-chunked",   # kv_mask / dropout reroute through chunked
+))

@@ -1,0 +1,190 @@
+"""Backend registry + capability-based resolution for attention operators.
+
+Each backend declares what it can do (`Capabilities`). The resolver takes
+the backend a spec requests plus the *requirements of this call* (causal?
+dropout? kv_mask? platform?) and either returns the backend, or — when a
+capability is missing — walks the backend's declared fallback chain and
+LOGS the resolution (`strict=True` raises instead). This replaces the
+seed's silent inline fallbacks (dropout -> rowwise inside `fastmax.py`,
+kernel -> interpret inside `kernels/ops.py`) with one explicit, observable
+routing step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.attention.spec import AttentionSpec
+
+__all__ = [
+    "Capabilities",
+    "Backend",
+    "UnsupportedCapabilityError",
+    "register",
+    "get_backend",
+    "list_backends",
+    "resolve",
+]
+
+logger = logging.getLogger("repro.attention")
+
+# log each distinct routing decision once per process (resolution happens
+# at trace time; repeating it per layer/step would be noise)
+_LOGGED: set = set()
+
+
+def _log_once(msg: str) -> None:
+    if msg not in _LOGGED:
+        _LOGGED.add(msg)
+        logger.info(msg)
+
+
+class UnsupportedCapabilityError(ValueError):
+    """A spec requested a capability its backend (and fallbacks) lack."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What a backend supports. `platforms` lists compiled targets;
+    `interpretable=True` means the same code runs off-platform in interpret
+    mode (Pallas) rather than requiring a reroute."""
+
+    causal: bool = True
+    noncausal: bool = True
+    decode: bool = False          # has a constant/streaming decode path
+    dropout: bool = False         # paper Fig. 2 factorized dropout
+    gqa: bool = True              # grouped-query attention (Hq != Hkv)
+    kv_mask: bool = False         # exact padding-token masking
+    feature_shard: bool = False   # TP sharding of the moment feature dim
+    custom_grad: bool = False     # paper §2.5 memory-reduced backward
+    platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu")
+    interpretable: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """A registered attention operator implementation.
+
+    `fn(q, k, v, spec, *, causal, kv_mask, rng, feature_shard)` computes
+    full-sequence attention. `fallback` names the backend to try when this
+    one lacks a requested capability (chains are walked transitively).
+    """
+
+    name: str
+    family: str
+    caps: Capabilities
+    fn: Callable
+    fallback: Optional[str] = None
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register(backend: Backend) -> Backend:
+    if backend.name in _REGISTRY:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no attention backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def list_backends() -> List[str]:
+    _ensure_builtins()
+    return sorted(_REGISTRY)
+
+
+def _ensure_builtins() -> None:
+    # built-in backends live in their own module to avoid import cycles;
+    # importing it populates the registry exactly once.
+    from repro.attention import backends  # noqa: F401
+
+
+def _missing(caps: Capabilities, *, causal: bool, dropout: bool,
+             kv_mask: bool, gqa: bool) -> List[str]:
+    need = []
+    if causal and not caps.causal:
+        need.append("causal")
+    if not causal and not caps.noncausal:
+        need.append("noncausal")
+    if dropout and not caps.dropout:
+        need.append("dropout")
+    if kv_mask and not caps.kv_mask:
+        need.append("kv_mask")
+    if gqa and not caps.gqa:
+        need.append("gqa")
+    return need
+
+
+def resolve(spec: AttentionSpec, *, causal: bool = False,
+            dropout: bool = False, kv_mask: bool = False, gqa: bool = False,
+            strict: bool = False) -> Backend:
+    """Pick the backend that will run this call.
+
+    Starts from `spec.backend_name`; on a capability miss walks the fallback
+    chain (same family) and logs the reroute, or raises
+    `UnsupportedCapabilityError` under `strict=True`. A platform miss on an
+    `interpretable` backend is not a reroute — the backend runs in interpret
+    mode — but is still logged.
+    """
+    _ensure_builtins()
+    requested = get_backend(spec.backend_name)
+    backend, seen = requested, set()
+    while True:
+        if backend.name in seen:  # defensive: cyclic fallback chain
+            raise UnsupportedCapabilityError(
+                f"cyclic fallback chain at {backend.name!r}")
+        seen.add(backend.name)
+        need = _missing(backend.caps, causal=causal, dropout=dropout,
+                        kv_mask=kv_mask, gqa=gqa)
+        if not need:
+            break
+        if strict:
+            raise UnsupportedCapabilityError(
+                f"backend {backend.name!r} (requested {spec.backend_name!r})"
+                f" does not support: {', '.join(need)} (strict=True)")
+        if backend.fallback is None:
+            raise UnsupportedCapabilityError(
+                f"no registered {backend.family} backend supports "
+                f"{', '.join(need)} (requested {spec.backend_name!r})")
+        nxt = get_backend(backend.fallback)
+        _log_once(
+            f"attention: {backend.name} lacks [{', '.join(need)}] -> "
+            f"routing to {nxt.name}")
+        backend = nxt
+
+    platform = jax.default_backend()
+    if platform not in backend.caps.platforms:
+        if backend.caps.interpretable:
+            _log_once(
+                f"attention: {backend.name} targets "
+                f"{'/'.join(backend.caps.platforms)}; platform={platform} "
+                f"-> interpret mode")
+        elif not strict and backend.fallback is not None:
+            nxt = get_backend(backend.fallback)
+            _log_once(
+                f"attention: {backend.name} requires platform "
+                f"{'/'.join(backend.caps.platforms)}; platform={platform} "
+                f"-> routing to {nxt.name}")
+            return resolve(
+                dataclasses.replace(spec, impl=nxt.name.split("-")[-1])
+                if backend.family == "fastmax" else spec,
+                causal=causal, dropout=dropout, kv_mask=kv_mask, gqa=gqa,
+                strict=strict)
+        else:
+            # never silently run a non-interpretable backend off-platform
+            raise UnsupportedCapabilityError(
+                f"backend {backend.name!r} requires platform "
+                f"{backend.caps.platforms}, running on {platform!r}")
+    return backend

@@ -1,0 +1,137 @@
+"""`AttentionSpec` — the one typed description of an attention operator.
+
+Replaces the seed's stringly-typed `attn_backend`/`attn_impl` pair, the
+13-kwarg `fastmax_attention()` surface, and the unused `FastmaxConfig`
+NamedTuple. A spec names a *family* (softmax | fastmax), the polynomial
+order `p` for fastmax, and the *impl* schedule within the family; the
+registry (`repro.attention.registry`) maps `spec.backend_name` to a
+registered backend and routes around missing capabilities.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["AttentionSpec", "FAMILIES", "IMPLS"]
+
+FAMILIES = ("softmax", "fastmax")
+# impl schedules within the fastmax family (softmax has a single impl)
+IMPLS = ("oracle", "rowwise", "chunked", "kernel")
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    """Static, hashable configuration of one attention operator.
+
+    Fields:
+      family:       "softmax" (paper baseline) or "fastmax" (the paper's
+                    factorizable polynomial attention).
+      p:            polynomial order of the fastmax kernel (paper: 1 or 2).
+      impl:         schedule within the family — "oracle" (O(N^2) reference),
+                    "rowwise" (paper's per-row prefix moments), "chunked"
+                    (TPU-native chunked prefix scan), "kernel" (Pallas).
+      chunk_size:   chunk length for the scan schedules; None inherits the
+                    caller's default (ModelConfig.chunk_size / 128).
+      normalize:    statistical q/k normalization (paper Eqs. 5-6).
+      denom_eps:    guard for p=1's sign-indefinite denominator.
+      custom_grad:  paper §2.5 memory-reduced backward (chunked/kernel).
+      dropout_rate/dropout_mode: the paper's Fig. 2 dropout variants
+                    ("quadratic" | "1d"); active only when an rng is passed
+                    to `attention(...)`.
+    """
+
+    family: str = "fastmax"
+    p: int = 2
+    impl: str = "chunked"
+    chunk_size: Optional[int] = None
+    normalize: bool = True
+    denom_eps: float = 1e-6
+    custom_grad: bool = True
+    dropout_rate: float = 0.0
+    dropout_mode: str = "quadratic"
+
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(
+                f"unknown attention family {self.family!r}; "
+                f"expected one of {FAMILIES}")
+        if self.family == "fastmax":
+            if self.impl not in IMPLS:
+                raise ValueError(
+                    f"unknown fastmax impl {self.impl!r}; "
+                    f"expected one of {IMPLS}")
+            if self.p not in (1, 2):
+                raise ValueError(f"fastmax p must be 1 or 2, got {self.p}")
+        if self.dropout_mode not in ("quadratic", "1d", "none"):
+            raise ValueError(f"unknown dropout_mode {self.dropout_mode!r}")
+
+    # -- registry keys ------------------------------------------------------
+
+    @property
+    def backend_name(self) -> str:
+        """Registry name of the backend this spec requests."""
+        if self.family == "softmax":
+            return "softmax"
+        return f"fastmax-{self.impl}"
+
+    @property
+    def legacy_name(self) -> str:
+        """The retired `attn_backend` string ("softmax"/"fastmax1"/
+        "fastmax2") — kept for result-JSON/back-compat labels only."""
+        if self.family == "softmax":
+            return "softmax"
+        return f"fastmax{self.p}"
+
+    def __str__(self) -> str:
+        if self.family == "softmax":
+            return "softmax"
+        return f"fastmax{self.p}/{self.impl}"
+
+    # -- construction helpers ----------------------------------------------
+
+    @classmethod
+    def parse(cls, name: Optional[str], **overrides) -> "AttentionSpec":
+        """Parse a CLI-style operator name into a spec.
+
+        Accepted: "softmax", "fastmax" (p=2), "fastmax1", "fastmax2",
+        registry names ("fastmax-chunked", ...), and "<family>[p][-impl]"
+        combinations such as "fastmax1-kernel". None -> default spec.
+        """
+        if name is None:
+            return cls(**overrides)
+        base, _, impl = name.partition("-")
+        kw = dict(overrides)
+        if impl:
+            kw.setdefault("impl", impl)
+        if base == "softmax":
+            if impl:
+                raise ValueError(
+                    f"softmax has no impl variants; got {name!r}")
+            return cls(family="softmax", **{k: v for k, v in kw.items()
+                                            if k != "impl"})
+        if base in ("fastmax", "fastmax1", "fastmax2"):
+            if base != "fastmax":
+                kw.setdefault("p", int(base[-1]))
+            return cls(family="fastmax", **kw)
+        raise ValueError(f"cannot parse attention operator name {name!r}")
+
+    def with_flags(self, backend: Optional[str] = None,
+                   impl: Optional[str] = None) -> "AttentionSpec":
+        """Deprecation shim: apply a legacy `attn_backend`/`attn_impl`
+        string pair on top of this spec."""
+        spec = self
+        if backend:
+            spec = AttentionSpec.parse(
+                backend,
+                **{f.name: getattr(spec, f.name)
+                   for f in dataclasses.fields(spec)
+                   if f.name not in ("family", "p")})
+        if impl:
+            spec = dataclasses.replace(spec, impl=impl)
+        return spec
+
+    def resolved(self, default_chunk_size: int = 128) -> "AttentionSpec":
+        """Fill inherited fields (chunk_size) for dispatch."""
+        if self.chunk_size is not None:
+            return self
+        return dataclasses.replace(self, chunk_size=default_chunk_size)

@@ -1,0 +1,148 @@
+"""Unified decode-state protocol: `init_state` / `prefill` / `step`.
+
+One streaming-inference surface for every backend family:
+
+  softmax  -> `KVCache` (O(N) per sequence, the baseline's cost)
+  fastmax  -> `Moments` (O(D^2 Dv) per kv head, INDEPENDENT of context —
+              the paper's asymptotic punchline at inference)
+
+`AttnState` is the union carried through the model's scan-over-layers;
+exactly one of (kv, moments) is populated. This protocol subsumes the seed's
+`repro.core.decode_state` module and the per-backend decode branches that
+lived in `repro.models.layers`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.attention.api import feature_shard_flag
+from repro.attention.registry import resolve
+from repro.attention.spec import AttentionSpec
+from repro.core.decode_state import init_fastmax_state
+from repro.core.fastmax import (
+    Moments,
+    _causal_scan,
+    combine_with_queries,
+    compute_moments,
+    normalize_qk,
+)
+from repro.core.softmax import softmax_attention
+
+__all__ = ["KVCache", "AttnState", "init_state", "prefill", "step"]
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # [B, Hkv, Nmax, D]
+    v: jnp.ndarray       # [B, Hkv, Nmax, Dv]
+    length: jnp.ndarray  # [] int32
+    mask: jnp.ndarray    # [B, Hkv, Nmax] validity (1=real token) — lets a
+    #                      masked prefill stay masked through every step
+
+
+class AttnState(NamedTuple):
+    """Union decode state: exactly one of (kv, moments) is used."""
+    kv: Optional[KVCache]
+    moments: Optional[Moments]
+
+
+def _check_state(state: AttnState, spec: AttentionSpec) -> None:
+    leg = "kv" if spec.family == "softmax" else "moments"
+    if getattr(state, leg) is None:
+        raise ValueError(
+            f"AttnState carries no {leg!r} but spec is {spec} — the state "
+            f"was initialized for a different attention family")
+
+
+def init_state(spec: AttentionSpec, *, batch: int, n_kv_heads: int,
+               q_head_dim: int, v_head_dim: int, max_len: int,
+               dtype=jnp.float32) -> AttnState:
+    """Fresh per-layer decode state for `batch` sequences of <= max_len."""
+    backend = resolve(spec, causal=True)
+    if not backend.caps.decode:
+        raise ValueError(
+            f"backend {backend.name!r} has no decode path; use a spec whose "
+            f"backend declares decode=True")
+    if spec.family == "softmax":
+        kv = KVCache(
+            k=jnp.zeros((batch, n_kv_heads, max_len, q_head_dim), dtype),
+            v=jnp.zeros((batch, n_kv_heads, max_len, v_head_dim), dtype),
+            length=jnp.zeros((), jnp.int32),
+            mask=jnp.ones((batch, n_kv_heads, max_len), jnp.float32),
+        )
+        return AttnState(kv=kv, moments=None)
+    mom = init_fastmax_state(batch, n_kv_heads, q_head_dim, v_head_dim,
+                             p=spec.p, dtype=jnp.float32)
+    return AttnState(kv=None, moments=mom)
+
+
+def prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            spec: AttentionSpec, *, state: AttnState,
+            kv_mask: Optional[jnp.ndarray] = None):
+    """Causal prefill of a prompt: returns (outputs, primed AttnState).
+
+    softmax: fills the KV cache. fastmax: one chunked causal scan produces
+    BOTH the outputs and the final moments (the seed recomputed moments in a
+    second pass).
+    """
+    n = q.shape[2]
+    _check_state(state, spec)
+    if spec.family == "softmax":
+        kv = state.kv
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kv.k, k.astype(kv.k.dtype), 0, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            kv.v, v.astype(kv.v.dtype), 0, axis=2)
+        o = softmax_attention(q, k, v, causal=True, kv_mask=kv_mask)
+        mc = kv.mask
+        if kv_mask is not None:
+            # persist prompt padding so every later step keeps it masked
+            mc = jax.lax.dynamic_update_slice_in_dim(
+                mc, kv_mask.astype(mc.dtype), 0, axis=2)
+        return o, AttnState(
+            kv=KVCache(kc, vc, jnp.asarray(n, jnp.int32), mc), moments=None)
+    spec_r = spec.resolved()
+    qh = normalize_qk(q) if spec.normalize else q
+    kh = normalize_qk(k) if spec.normalize else k
+    o, final = _causal_scan(
+        qh, kh, v, p=spec.p, chunk_size=spec_r.chunk_size, kv_mask=kv_mask,
+        denom_eps=spec.denom_eps,
+        feature_shard=feature_shard_flag(k.shape[1]))
+    return o.astype(q.dtype), AttnState(kv=None, moments=final)
+
+
+def step(state: AttnState, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+         spec: AttentionSpec):
+    """One-token decode. q:[B,Hq,1,D], k/v:[B,Hkv,1,*].
+
+    softmax: append to the cache, attend over the valid prefix.
+    fastmax: fold (k, v) into the moments, contract with q —
+    O(D^p Dv) per head per token, independent of context length.
+    Returns (o [B,Hq,1,Dv], new AttnState).
+    """
+    _check_state(state, spec)
+    if spec.family == "softmax":
+        kv = state.kv
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kv.k, k.astype(kv.k.dtype), kv.length, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            kv.v, v.astype(kv.v.dtype), kv.length, axis=2)
+        nmax = kc.shape[2]
+        mask = (jnp.arange(nmax)[None, None, :] <= kv.length).astype(
+            jnp.float32) * kv.mask
+        o = softmax_attention(q, kc, vc, causal=False, kv_mask=mask)
+        return o, AttnState(kv=KVCache(kc, vc, kv.length + 1, kv.mask),
+                            moments=None)
+
+    qh = normalize_qk(q) if spec.normalize else q
+    kh = normalize_qk(k) if spec.normalize else k
+    new_mom = state.moments + compute_moments(kh, v, p=spec.p)
+    hkv, hq = k.shape[1], q.shape[1]
+    # fold the query group into the token axis (no broadcast of the state)
+    qg = qh.reshape(q.shape[0], hkv, hq // hkv, q.shape[-1])
+    num, den = combine_with_queries(qg, new_mom, p=spec.p)
+    o = num / (den + spec.denom_eps)[..., None]
+    o = o.reshape(q.shape[0], hq, 1, -1).astype(q.dtype)
+    return o, AttnState(kv=None, moments=new_mom)

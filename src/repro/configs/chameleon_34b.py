@@ -2,6 +2,7 @@
 Early fusion: VQ image tokens are ordinary vocab ids (frontend stubbed);
 qk_norm per the Chameleon stability fix. [arXiv:2405.09818; unverified]"""
 import dataclasses
+from repro.attention import AttentionSpec
 from repro.models.transformer import ModelConfig
 
 def config() -> ModelConfig:
@@ -12,7 +13,7 @@ def config() -> ModelConfig:
         pattern=("attn:mlp",),
         qk_norm=True, rope_theta=1e4,
         mlp_act="swiglu", norm_type="rmsnorm",
-        attn_backend="fastmax2", chunk_size=512,
+        attn=AttentionSpec(family="fastmax", p=2), chunk_size=512,
         param_dtype="bfloat16", activ_dtype="bfloat16",
     )
 

@@ -2,6 +2,7 @@
 MLA kv_lora=512, MoE 2 shared + 160 routed top-6, first layer dense.
 [arXiv:2405.04434; hf]"""
 import dataclasses
+from repro.attention import AttentionSpec
 from repro.models.transformer import ModelConfig
 
 def config() -> ModelConfig:
@@ -13,7 +14,7 @@ def config() -> ModelConfig:
         use_mla=True, kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64,
         n_experts=160, moe_top_k=6, n_shared_experts=2, d_ff_expert=1536,
         rope_theta=1e4, mlp_act="swiglu", norm_type="rmsnorm",
-        attn_backend="fastmax2", chunk_size=512,
+        attn=AttentionSpec(family="fastmax", p=2), chunk_size=512,
         param_dtype="bfloat16", activ_dtype="bfloat16",
     )
 

@@ -1,6 +1,7 @@
 """granite-20b [dense]: 52L d=6144 48H (MQA kv=1) d_ff=24576 vocab=49152.
 llama-arch, code. [arXiv:2405.04324; hf]"""
 import dataclasses
+from repro.attention import AttentionSpec
 from repro.models.transformer import ModelConfig
 
 def config() -> ModelConfig:
@@ -10,7 +11,7 @@ def config() -> ModelConfig:
         n_heads=48, n_kv_heads=1, head_dim=128, d_ff=24576,
         pattern=("attn:mlp",),
         rope_theta=1e4, mlp_act="swiglu", norm_type="rmsnorm",
-        attn_backend="fastmax2", chunk_size=512,
+        attn=AttentionSpec(family="fastmax", p=2), chunk_size=512,
         param_dtype="bfloat16", activ_dtype="bfloat16",
     )
 

@@ -2,6 +2,7 @@
 MoE 16e top-2. Mamba+attn 1:7 interleave, MoE every other layer.
 [arXiv:2403.19887; hf]"""
 import dataclasses
+from repro.attention import AttentionSpec
 from repro.models.transformer import ModelConfig
 
 def config() -> ModelConfig:
@@ -15,7 +16,7 @@ def config() -> ModelConfig:
         mamba_d_state=16, mamba_d_conv=4, mamba_expand=2,
         rope_theta=0.0,  # jamba uses no positional encoding
         mlp_act="swiglu", norm_type="rmsnorm",
-        attn_backend="fastmax2", chunk_size=512,
+        attn=AttentionSpec(family="fastmax", p=2), chunk_size=512,
         param_dtype="bfloat16", activ_dtype="bfloat16",
     )
 

@@ -2,6 +2,7 @@
 vocab=163840, MoE 384e top-8 (+1 shared), first layer dense.
 Trillion-param MoE (paper-table). [arXiv:2501.kimi2; unverified]"""
 import dataclasses
+from repro.attention import AttentionSpec
 from repro.models.transformer import ModelConfig
 
 def config() -> ModelConfig:
@@ -12,7 +13,7 @@ def config() -> ModelConfig:
         pattern=("attn:moe",), first_k_dense=1,
         n_experts=384, moe_top_k=8, n_shared_experts=1, d_ff_expert=2048,
         rope_theta=5e4, mlp_act="swiglu", norm_type="rmsnorm",
-        attn_backend="fastmax2", chunk_size=512,
+        attn=AttentionSpec(family="fastmax", p=2), chunk_size=512,
         param_dtype="bfloat16", activ_dtype="bfloat16",
     )
 

@@ -1,6 +1,7 @@
 """llama3-405b [dense]: 126L d=16384 128H (GQA kv=8) d_ff=53248 vocab=128256.
 GQA, 128k vocab. [arXiv:2407.21783; unverified]"""
 import dataclasses
+from repro.attention import AttentionSpec
 from repro.models.transformer import ModelConfig
 
 def config() -> ModelConfig:
@@ -10,7 +11,7 @@ def config() -> ModelConfig:
         n_heads=128, n_kv_heads=8, head_dim=128, d_ff=53248,
         pattern=("attn:mlp",),
         rope_theta=5e5, mlp_act="swiglu", norm_type="rmsnorm",
-        attn_backend="fastmax2", chunk_size=512,
+        attn=AttentionSpec(family="fastmax", p=2), chunk_size=512,
         param_dtype="bfloat16", activ_dtype="bfloat16",
     )
 

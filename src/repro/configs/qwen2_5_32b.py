@@ -1,6 +1,7 @@
 """qwen2.5-32b [dense]: 64L d=5120 40H (GQA kv=8) d_ff=27648 vocab=152064.
 GQA + QKV bias. [hf:Qwen/Qwen2.5-0.5B; hf]"""
 import dataclasses
+from repro.attention import AttentionSpec
 from repro.models.transformer import ModelConfig
 
 def config() -> ModelConfig:
@@ -11,7 +12,7 @@ def config() -> ModelConfig:
         pattern=("attn:mlp",),
         qkv_bias=True, rope_theta=1e6,
         mlp_act="swiglu", norm_type="rmsnorm",
-        attn_backend="fastmax2", chunk_size=512,
+        attn=AttentionSpec(family="fastmax", p=2), chunk_size=512,
         param_dtype="bfloat16", activ_dtype="bfloat16",
     )
 

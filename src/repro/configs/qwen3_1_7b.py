@@ -1,6 +1,7 @@
 """qwen3-1.7b [dense]: 28L d=2048 16H (GQA kv=8) d_ff=6144 vocab=151936.
 qk_norm + GQA, tied embeddings. [hf:Qwen/Qwen3-8B; hf]"""
 import dataclasses
+from repro.attention import AttentionSpec
 from repro.models.transformer import ModelConfig
 
 def config() -> ModelConfig:
@@ -11,7 +12,7 @@ def config() -> ModelConfig:
         pattern=("attn:mlp",),
         qk_norm=True, rope_theta=1e6, tie_embeddings=True,
         mlp_act="swiglu", norm_type="rmsnorm",
-        attn_backend="fastmax2", chunk_size=512,
+        attn=AttentionSpec(family="fastmax", p=2), chunk_size=512,
         param_dtype="bfloat16", activ_dtype="bfloat16",
     )
 

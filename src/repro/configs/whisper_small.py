@@ -2,6 +2,7 @@
 Enc-dec; conv frontend is a STUB (input_specs feeds frame embeddings).
 [arXiv:2212.04356; unverified]"""
 import dataclasses
+from repro.attention import AttentionSpec
 from repro.models.transformer import ModelConfig
 
 def config() -> ModelConfig:
@@ -13,7 +14,7 @@ def config() -> ModelConfig:
         encoder_layers=12, encoder_seq=1500, cross_attention=True,
         rope_theta=0.0, pos_emb="sinusoidal",
         mlp_act="gelu", norm_type="layernorm",
-        attn_backend="fastmax2", chunk_size=512,
+        attn=AttentionSpec(family="fastmax", p=2), chunk_size=512,
         param_dtype="bfloat16", activ_dtype="bfloat16",
     )
 

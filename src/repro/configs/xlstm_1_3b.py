@@ -2,6 +2,7 @@
 (xLSTM[7:1] interleave). ATTENTION-FREE: FAST inapplicable (DESIGN.md
 §Arch-applicability). [arXiv:2405.04517; unverified]"""
 import dataclasses
+from repro.attention import AttentionSpec
 from repro.models.transformer import ModelConfig
 
 def config() -> ModelConfig:
@@ -11,7 +12,7 @@ def config() -> ModelConfig:
         n_heads=4, n_kv_heads=4, head_dim=512, d_ff=0,
         pattern=("mlstm:none",) * 7 + ("slstm:none",),
         rope_theta=0.0, norm_type="rmsnorm", tie_embeddings=True,
-        attn_backend="fastmax2",  # unused (no attention blocks)
+        attn=AttentionSpec(family="fastmax", p=2),  # unused (no attention blocks)
         param_dtype="bfloat16", activ_dtype="bfloat16",
     )
 

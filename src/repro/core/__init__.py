@@ -1,6 +1,13 @@
-"""Core: the paper's contribution — Fastmax factorizable attention."""
+"""Core: the paper's contribution — Fastmax factorizable attention.
+
+NOTE: the public operator surface moved to `repro.attention`
+(`AttentionSpec` + `attention(...)` + the `init_state`/`prefill`/`step`
+decode protocol). The names re-exported here are implementation primitives
+plus thin deprecation shims kept so external imports keep working.
+"""
+import warnings
+
 from repro.core.fastmax import (  # noqa: F401
-    FastmaxConfig,
     Moments,
     compute_moments,
     fastmax_attention,
@@ -16,3 +23,15 @@ from repro.core.decode_state import (  # noqa: F401
     init_fastmax_state,
 )
 from repro.core.softmax import softmax_attention  # noqa: F401
+
+
+def __getattr__(name):
+    if name == "FastmaxConfig":
+        # retired NamedTuple, absorbed into repro.attention.AttentionSpec
+        warnings.warn(
+            "repro.core.FastmaxConfig is retired; use "
+            "repro.attention.AttentionSpec", DeprecationWarning,
+            stacklevel=2)
+        from repro.attention import AttentionSpec
+        return AttentionSpec
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,11 +1,14 @@
-"""Streaming/decode state for Fastmax attention.
+"""Streaming/decode state primitives for Fastmax attention.
 
 The asymptotic punchline of FAST at inference: the recurrent state of a
 fastmax attention layer is its moment tuple — size
 ``Hkv * (1 + D + D^2) * (Dv + 1)`` floats, INDEPENDENT of context length.
 A 32k- or 500k-token context costs the same per decoded token.
 
-(The softmax baseline needs an O(N) KV cache; see `repro.models.kvcache`.)
+NOTE: the unified decode-state protocol (`init_state`/`prefill`/`step`
+over the `AttnState` union, covering the softmax KV cache too) lives in
+`repro.attention.state` and subsumes this module; these functions remain
+as fastmax-level primitives / back-compat shims.
 """
 from __future__ import annotations
 

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import functools
 import math
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -42,7 +43,6 @@ from repro.core.ref import (
 )
 
 __all__ = [
-    "FastmaxConfig",
     "Moments",
     "fastmax_attention",
     "fastmax_noncausal",
@@ -52,18 +52,6 @@ __all__ = [
     "normalize_qk",
     "poly_kernel",
 ]
-
-
-class FastmaxConfig(NamedTuple):
-    """Static configuration for a fastmax call."""
-
-    p: int = 2                 # polynomial order (paper: 1 or 2)
-    causal: bool = False
-    normalize: bool = True     # paper Eqs. 5-6
-    chunk_size: int = 128      # chunk length for the scan schedule
-    denom_eps: float = 1e-6    # guards p=1's sign-indefinite denominator
-    custom_grad: bool = True   # paper §2.5 memory-reduced backward
-    accum_dtype: jnp.dtype = jnp.float32
 
 
 class Moments(NamedTuple):
@@ -594,7 +582,7 @@ def fastmax_rowwise(
 
 
 # ---------------------------------------------------------------------------
-# Entry point
+# Deprecated entry point (use repro.attention.attention)
 # ---------------------------------------------------------------------------
 
 
@@ -616,54 +604,23 @@ def fastmax_attention(
     dropout_mode: str = "quadratic",
     dropout_rng: Optional[jax.Array] = None,
 ) -> jnp.ndarray:
-    """Fastmax attention entry point. q:[B,Hq,N,D], k/v:[B,Hkv,M,*]."""
-    if impl == "oracle":
-        hkv = k.shape[1]
-        qg = _group_queries(q, hkv)
-        o = jax.vmap(
-            lambda qq: fastmax_attention_ref(
-                qq, k, v, p=p, causal=causal, normalize=normalize,
-                denom_eps=denom_eps),
-            in_axes=2, out_axes=2,
-        )(qg)
-        return _ungroup(o)
-    if impl == "rowwise":
-        if not normalize:
-            raise ValueError("rowwise impl always normalizes (paper schedule)")
-        return fastmax_rowwise(
-            q, k, v, p=p, causal=causal, denom_eps=denom_eps,
-            dropout_rate=dropout_rate, dropout_mode=dropout_mode,
-            dropout_rng=dropout_rng,
-        )
-    if impl == "kernel":
-        from repro.kernels import ops as kernel_ops  # lazy: optional dep
+    """DEPRECATED shim over `repro.attention.attention`.
 
-        qh = normalize_qk(q) if normalize else q
-        kh = normalize_qk(k) if normalize else k
-        return kernel_ops.fastmax(qh, kh, v, p=p, causal=causal,
-                                  denom_eps=denom_eps)
-    if impl != "chunked":
-        raise ValueError(f"unknown impl {impl!r}")
+    The 13-kwarg entry point is retired: build an `AttentionSpec` and call
+    the dispatcher instead. Kept so external imports keep working; routing
+    (dropout -> rowwise, etc.) now goes through the capability registry.
+    `feature_shard` is re-derived from the active mesh by the dispatcher.
+    """
+    from repro.attention import AttentionSpec, attention
 
-    if dropout_rate > 0.0 and dropout_rng is not None:
-        # Quadratic-feature dropout requires the explicit-phi path; the
-        # chunked production path is used with dropout disabled (large-scale
-        # pretraining norm) — fall back transparently for small models.
-        return fastmax_rowwise(
-            q, k, v, p=p, causal=causal, denom_eps=denom_eps,
-            dropout_rate=dropout_rate, dropout_mode=dropout_mode,
-            dropout_rng=dropout_rng,
-        )
-
-    qh = normalize_qk(q) if normalize else q
-    kh = normalize_qk(k) if normalize else k
-    if causal:
-        return fastmax_causal_chunked(
-            qh, kh, v, p=p, chunk_size=chunk_size, kv_mask=kv_mask,
-            denom_eps=denom_eps, custom_grad=custom_grad,
-            feature_shard=feature_shard,
-        )
-    return fastmax_noncausal(
-        qh, kh, v, p=p, kv_mask=kv_mask, denom_eps=denom_eps,
-        chunk_size=max(chunk_size, 512), feature_shard=feature_shard,
-    )
+    del feature_shard  # re-derived by the dispatcher
+    warnings.warn(
+        "repro.core.fastmax_attention is deprecated; use "
+        "repro.attention.attention(q, k, v, AttentionSpec(...))",
+        DeprecationWarning, stacklevel=2)
+    spec = AttentionSpec(
+        family="fastmax", p=p, impl=impl, chunk_size=chunk_size,
+        normalize=normalize, denom_eps=denom_eps, custom_grad=custom_grad,
+        dropout_rate=dropout_rate, dropout_mode=dropout_mode)
+    return attention(q, k, v, spec, causal=causal, kv_mask=kv_mask,
+                     rng=dropout_rng)

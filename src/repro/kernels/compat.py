@@ -1,0 +1,21 @@
+"""JAX version compatibility for the Pallas TPU kernels.
+
+The TPU compiler-params class was renamed across JAX releases:
+`pltpu.TPUCompilerParams` (<= 0.4.x / early 0.5.x) became
+`pltpu.CompilerParams` (newer releases). Resolve whichever exists once so
+every kernel builds against any installed JAX.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+__all__ = ["tpu_compiler_params"]
+
+
+def tpu_compiler_params(dimension_semantics, **kwargs):
+    """Build TPU compiler params portably across JAX versions."""
+    return _COMPILER_PARAMS_CLS(
+        dimension_semantics=tuple(dimension_semantics), **kwargs)

@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 __all__ = ["fastmax_causal_pallas"]
 
 
@@ -203,9 +205,7 @@ def fastmax_causal_pallas(
             pltpu.VMEM((1, d), acc),
             pltpu.VMEM((d, d), acc),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
-        ),
+        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
         interpret=interpret,
         name=f"fastmax_causal_p{p}",
     )(qp, kp, vp, w)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
 from repro.kernels.fastmax_causal import _pick_bm
 
 __all__ = ["fastmax_decode_pallas"]
@@ -155,9 +156,7 @@ def fastmax_decode_pallas(
             pltpu.VMEM((g, 1), acc),
         ],
         input_output_aliases={3: 1, 4: 2, 5: 3, 6: 4, 7: 5, 8: 6},
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
-        ),
+        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
         interpret=interpret,
         name=f"fastmax_decode_p{p}",
     )(qr, kr, vr, m0r, m1r, m2r, g0r, g1r, g2r)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
 from repro.kernels.fastmax_causal import _pick_bm, _poly
 
 __all__ = ["fastmax_noncausal_pallas"]
@@ -169,9 +170,8 @@ def fastmax_noncausal_pallas(
             jax.ShapeDtypeStruct((b * hkv, 1, d), acc),
             jax.ShapeDtypeStruct((b * hkv, d, d), acc),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
-        ),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
         name=f"fastmax_moments_p{p}",
     )(kp, vp, w)
@@ -196,9 +196,8 @@ def fastmax_noncausal_pallas(
             pltpu.VMEM((g * cq, dv), acc),
             pltpu.VMEM((g * cq, 1), acc),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name=f"fastmax_combine_p{p}",
     )(qp, m0, m1, m2, g0, g1, g2)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.attention import AttentionSpec
 from repro.configs import SHAPES, all_arch_ids, get_config
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
@@ -67,16 +68,17 @@ def _opt_shardings(opt_shapes, param_sh, mesh):
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
-             attn_backend: str | None = None, donate: bool = True,
+             attn: AttentionSpec | str | None = None, donate: bool = True,
              extra_cfg: dict | None = None) -> dict:
     t0 = time.time()
     shape = SHAPES[shape_name]
     overrides = dict(extra_cfg or {})
-    if attn_backend:
-        overrides["attn_backend"] = attn_backend
+    if attn:
+        overrides["attn"] = (AttentionSpec.parse(attn)
+                             if isinstance(attn, str) else attn)
     cfg = get_config(arch, **overrides)
 
-    if shape_name == "long_500k" and cfg.attn_backend == "softmax" \
+    if shape_name == "long_500k" and cfg.attn.family == "softmax" \
             and cfg.family not in ("ssm", "hybrid"):
         return {"arch": arch, "shape": shape_name, "skipped":
                 "long_500k needs sub-quadratic attention; softmax baseline "
@@ -170,6 +172,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):   # older JAX returns [dict] per device program
+        cost = cost[0] if cost else {}
     hlo = analyze_hlo(compiled.as_text())
 
     # --- roofline terms (see EXPERIMENTS.md §Roofline) ---------------------
@@ -208,7 +212,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         "arch": arch, "shape": shape_name, "kind": shape.kind,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "n_chips": int(n_chips),
-        "attn_backend": cfg.attn_backend,
+        "attn_backend": cfg.attn.legacy_name,   # result-JSON back-compat key
+        "attn_spec": str(cfg.attn),
         "n_params": int(n_params),
         "param_bytes_global": _tree_size_bytes(params_shapes),
         "memory_analysis": {
@@ -265,7 +270,7 @@ def main():
                     + (f"__{args.attn}" if args.attn else "")
                 try:
                     res = run_cell(arch, shape, multi_pod=multi,
-                                   attn_backend=args.attn)
+                                   attn=args.attn)
                     status = "SKIP" if "skipped" in res else "OK"
                 except Exception as e:  # noqa: BLE001 — report, keep going
                     res = {"arch": arch, "shape": shape,

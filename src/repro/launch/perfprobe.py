@@ -34,7 +34,7 @@ def main():
 
     dr.analyze_hlo = capture
     res = dr.run_cell(args.arch, args.shape, multi_pod=args.multi,
-                      attn_backend=args.attn)
+                      attn=args.attn)
     print(json.dumps(res.get("roofline", res), indent=2))
     print({k: f"{v:.3e}" for k, v in res.get("hlo", {}).items()
            if k.startswith("coll_") and v})

@@ -53,9 +53,11 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     import dataclasses
+
+    from repro.attention import AttentionSpec
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.attn:
-        cfg = dataclasses.replace(cfg, attn_backend=args.attn)
+        cfg = dataclasses.replace(cfg, attn=AttentionSpec.parse(args.attn))
     params, _ = init_model(jax.random.PRNGKey(0), cfg)
 
     rng = np.random.default_rng(0)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.attention import AttentionSpec
 from repro.ckpt import CheckpointManager
 from repro.configs import get_config, get_smoke_config
 from repro.data import SyntheticLM, make_batch_iterator
@@ -41,7 +42,7 @@ def build(args):
            else get_config(args.arch))
     over = {}
     if args.attn:
-        over["attn_backend"] = args.attn
+        over["attn"] = AttentionSpec.parse(args.attn)
     if over:
         cfg = dataclasses.replace(cfg, **over)
     return cfg
@@ -69,7 +70,7 @@ def main(argv=None):
     params, axes = init_model(key, cfg)
     n_params = count_params(params)
     print(f"arch={cfg.name} params={n_params/1e6:.2f}M "
-          f"attn={cfg.attn_backend}", flush=True)
+          f"attn={cfg.attn}", flush=True)
 
     opt_name, optimizer = pick_optimizer(cfg, n_params, lr=args.lr,
                                          total_steps=args.steps)

@@ -1,30 +1,25 @@
 """Model layers: norms, RoPE, MLP, and attention with pluggable score backend.
 
-The attention layer is where the paper's technique plugs in: `attn_backend`
-selects softmax (vanilla baseline), fastmax1, or fastmax2 (the paper's p=1/2
-polynomial kernels). Everything else (GQA, qk-norm, biases, RoPE, MLA) is
-orthogonal — FAST is a drop-in replacement for the score computation, which
-is exactly the paper's §5 claim.
+The attention layer is where the paper's technique plugs in: the model
+config's `attn: AttentionSpec` selects the operator (softmax baseline vs
+the paper's fastmax p=1/2 polynomial kernels) and every call goes through
+the `repro.attention` dispatcher. Everything else (GQA, qk-norm, biases,
+RoPE, MLA) is orthogonal — FAST is a drop-in replacement for the score
+computation, which is exactly the paper's §5 claim.
 
-Decode states:
+Decode states (repro.attention unified protocol):
   softmax  -> KVCache (O(N) per sequence)
-  fastmax* -> Moments (O(D^2 Dv) per kv head, independent of context length)
+  fastmax  -> Moments (O(D^2 Dv) per kv head, independent of context length)
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import (
-    Moments,
-    fastmax_attention,
-    fastmax_decode_step,
-    fastmax_prefill,
-    init_fastmax_state,
-    softmax_attention,
-)
+from repro import attention as A
+from repro.attention import AttnState, KVCache  # noqa: F401 (re-export)
 from repro.models.param import Builder
 
 # ---------------------------------------------------------------------------
@@ -113,18 +108,7 @@ def apply_mlp(params, x, *, act: str):
 # ---------------------------------------------------------------------------
 # Attention (GQA + pluggable backend + optional MLA projections)
 # ---------------------------------------------------------------------------
-
-
-class KVCache(NamedTuple):
-    k: jnp.ndarray      # [B, Hkv, Nmax, D]
-    v: jnp.ndarray      # [B, Hkv, Nmax, Dv]
-    length: jnp.ndarray  # [] int32
-
-
-class AttnState(NamedTuple):
-    """Union decode state: exactly one of (kv, moments) is used."""
-    kv: Optional[KVCache]
-    moments: Optional[Moments]
+# KVCache / AttnState moved to repro.attention.state (re-exported above).
 
 
 def init_attention(b: Builder, name: str, cfg) -> None:
@@ -192,51 +176,6 @@ def _project_qkv(params, x, cfg, positions):
     return q, k, v
 
 
-def _bcast_kv(k, hq):
-    """Broadcast kv heads to q heads (kv-major repeat) — softmax path."""
-    b, hkv, n, d = k.shape
-    if hkv == hq:
-        return k
-    return jnp.repeat(k, hq // hkv, axis=1)
-
-
-def _feature_shard_flag(hkv: int) -> bool:
-    """True when KV heads do NOT divide the 'model' axis of the active mesh
-    (GQA/MQA at TP degree > Hkv): the kv moment update would replicate
-    TP-ways, so fastmax switches to token-sharded updates (partial moments
-    + one small psum per chunk)."""
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or not mesh.axis_names:
-            from jax._src import mesh as mesh_lib
-            mesh = mesh_lib.thread_resources.env.physical_mesh
-    except Exception:
-        return False
-    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
-        return False
-    return hkv % mesh.shape["model"] != 0
-
-
-def _run_backend(q, k, v, cfg, *, causal, kv_mask=None):
-    if cfg.attn_backend == "softmax":
-        k = _bcast_kv(k, q.shape[1])
-        v = _bcast_kv(v, q.shape[1])
-        if kv_mask is not None and kv_mask.shape[1] != q.shape[1]:
-            kv_mask = jnp.repeat(kv_mask, q.shape[1] // kv_mask.shape[1],
-                                 axis=1)
-        return softmax_attention(q, k, v, causal=causal, kv_mask=kv_mask)
-    p = 1 if cfg.attn_backend == "fastmax1" else 2
-    # grouped path: moments computed once per KV head (G-fold combine);
-    # the head-sharded group reshape tiles cleanly because consecutive
-    # q-head shards stay within one kv group (H/s <= G for all configs)
-    return fastmax_attention(
-        q, k, v, p=p, causal=causal, impl=cfg.attn_impl,
-        chunk_size=cfg.chunk_size, kv_mask=kv_mask,
-        denom_eps=cfg.denom_eps,
-        feature_shard=_feature_shard_flag(k.shape[1]),
-    )
-
-
 def apply_attention(params, x, cfg, *, causal=True, positions=None,
                     kv_mask=None, kv_x: Optional[jnp.ndarray] = None):
     """Full-sequence attention. `kv_x` (cross-attention source) optional."""
@@ -251,49 +190,36 @@ def apply_attention(params, x, cfg, *, causal=True, positions=None,
         kv_pos = jnp.arange(m, dtype=jnp.int32)
         q, _, _ = _project_qkv(params, x, cfg, positions)
         _, k, v = _project_qkv(params, kv_x, cfg, kv_pos)
-    o = _run_backend(q, k, v, cfg, causal=causal, kv_mask=kv_mask)
+    # grouped path: moments computed once per KV head (G-fold combine);
+    # the head-sharded group reshape tiles cleanly because consecutive
+    # q-head shards stay within one kv group (H/s <= G for all configs)
+    o = A.attention(q, k, v, cfg.attn_spec, causal=causal, kv_mask=kv_mask)
     return jnp.einsum("bhnk,hkd->bnd", o.astype(x.dtype), params["wo"])
 
 
-# -- decode -----------------------------------------------------------------
+# -- decode (unified repro.attention state protocol) --------------------------
+
+
+def _kv_dims(cfg):
+    """(n_kv_heads, q_head_dim) as the decode state sees them (MLA
+    decompresses to per-q-head k/v, so Hkv == Hq there)."""
+    hkv = cfg.n_heads if cfg.use_mla else cfg.n_kv_heads
+    dq = (cfg.qk_nope_dim + cfg.qk_rope_dim) if cfg.use_mla else cfg.head_dim
+    return hkv, dq
 
 
 def init_attn_state(cfg, batch: int, max_len: int, dtype) -> AttnState:
-    hkv = cfg.n_heads if cfg.use_mla else cfg.n_kv_heads
-    dq = (cfg.qk_nope_dim + cfg.qk_rope_dim) if cfg.use_mla else cfg.head_dim
-    if cfg.attn_backend == "softmax":
-        kv = KVCache(
-            k=jnp.zeros((batch, hkv, max_len, dq), dtype),
-            v=jnp.zeros((batch, hkv, max_len, cfg.head_dim), dtype),
-            length=jnp.zeros((), jnp.int32),
-        )
-        return AttnState(kv=kv, moments=None)
-    p = 1 if cfg.attn_backend == "fastmax1" else 2
-    mom = init_fastmax_state(batch, hkv, dq, cfg.head_dim, p=p,
-                             dtype=jnp.float32)
-    return AttnState(kv=None, moments=mom)
+    hkv, dq = _kv_dims(cfg)
+    return A.init_state(cfg.attn_spec, batch=batch, n_kv_heads=hkv,
+                        q_head_dim=dq, v_head_dim=cfg.head_dim,
+                        max_len=max_len, dtype=dtype)
 
 
 def attention_decode(params, x_t, state: AttnState, cfg, *, position):
     """One-token decode. x_t: [B, 1, d]. Returns (y_t, new_state)."""
     pos = jnp.reshape(position, (1,)).astype(jnp.int32)
     q, k, v = _project_qkv(params, x_t, cfg, pos)
-    if cfg.attn_backend == "softmax":
-        kv = state.kv
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            kv.k, k.astype(kv.k.dtype), kv.length, axis=2)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            kv.v, v.astype(kv.v.dtype), kv.length, axis=2)
-        nmax = kc.shape[2]
-        mask = (jnp.arange(nmax)[None, None, :] <= kv.length).astype(
-            jnp.float32) * jnp.ones((x_t.shape[0], kc.shape[1], 1))
-        o = softmax_attention(q, kc, vc, causal=False, kv_mask=mask)
-        new = AttnState(kv=KVCache(kc, vc, kv.length + 1), moments=None)
-    else:
-        p = 1 if cfg.attn_backend == "fastmax1" else 2
-        o, mom = fastmax_decode_step(state.moments, q, k, v, p=p,
-                                     denom_eps=cfg.denom_eps)
-        new = AttnState(kv=None, moments=mom)
+    o, new = A.step(state, q, k, v, cfg.attn_spec)
     y = jnp.einsum("bhnk,hkd->bnd", o.astype(x_t.dtype), params["wo"])
     return y, new
 
@@ -304,27 +230,6 @@ def attention_prefill(params, x, state: AttnState, cfg, *, positions=None):
     if positions is None:
         positions = jnp.arange(n, dtype=jnp.int32)
     q, k, v = _project_qkv(params, x, cfg, positions)
-    if cfg.attn_backend == "softmax":
-        kv = state.kv
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            kv.k, k.astype(kv.k.dtype), 0, axis=2)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            kv.v, v.astype(kv.v.dtype), 0, axis=2)
-        o = softmax_attention(q, k, v, causal=True)
-        new = AttnState(kv=KVCache(kc, vc, jnp.asarray(n, jnp.int32)),
-                        moments=None)
-    else:
-        p = 1 if cfg.attn_backend == "fastmax1" else 2
-        # grouped path (moments shared per KV head); the carried moment
-        # state stays per-KV-HEAD (moments never involve q)
-        o = fastmax_attention(
-            q, k, v, p=p, causal=True, impl=cfg.attn_impl,
-            chunk_size=cfg.chunk_size, denom_eps=cfg.denom_eps,
-            feature_shard=_feature_shard_flag(k.shape[1]))
-        from repro.core.fastmax import (compute_moments_chunked,
-                                        normalize_qk as _nq)
-        mom = compute_moments_chunked(_nq(k), v, p=p,
-                                      chunk_size=max(cfg.chunk_size, 512))
-        new = AttnState(kv=None, moments=mom)
+    o, new = A.prefill(q, k, v, cfg.attn_spec, state=state)
     y = jnp.einsum("bhnk,hkd->bnd", o.astype(x.dtype), params["wo"])
     return y, new

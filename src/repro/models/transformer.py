@@ -16,11 +16,13 @@ policy for the scan body.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.attention import AttentionSpec
 from repro.models import layers as L
 from repro.sharding.rules import maybe_constraint
 from repro.models import mamba as M
@@ -45,11 +47,12 @@ class ModelConfig:
     d_ff: int = 2048
     pattern: Tuple[str, ...] = ("attn:mlp",)
     first_k_dense: int = 0          # leading dense (non-MoE) blocks, unrolled
-    # attention
-    attn_backend: str = "fastmax2"  # softmax | fastmax1 | fastmax2
-    attn_impl: str = "chunked"      # chunked | kernel | rowwise | oracle
-    chunk_size: int = 128
-    denom_eps: float = 1e-6
+    # attention — one typed operator spec (see repro.attention); the legacy
+    # attn_backend/attn_impl string pair is accepted as a deprecation shim
+    attn: AttentionSpec = AttentionSpec()
+    attn_backend: dataclasses.InitVar[Optional[str]] = None
+    attn_impl: dataclasses.InitVar[Optional[str]] = None
+    chunk_size: int = 128           # scan chunk (attention inherits; ssm too)
     qkv_bias: bool = False
     qk_norm: bool = False
     rope_theta: float = 1e4         # 0 disables rope
@@ -84,6 +87,24 @@ class ModelConfig:
     activ_dtype: str = "float32"
     remat: str = "full"             # none | dots | full
     logits_softcap: float = 0.0
+
+    def __post_init__(self, attn_backend, attn_impl):
+        if attn_backend or attn_impl:
+            warnings.warn(
+                "ModelConfig(attn_backend=..., attn_impl=...) is deprecated;"
+                " pass attn=AttentionSpec(...) instead",
+                DeprecationWarning, stacklevel=3)
+            object.__setattr__(
+                self, "attn", self.attn.with_flags(backend=attn_backend,
+                                                   impl=attn_impl))
+
+    @property
+    def attn_spec(self) -> AttentionSpec:
+        """The attention spec with config-level defaults (chunk_size)
+        resolved — what the layers hand to `repro.attention.attention`."""
+        if self.attn.chunk_size is not None:
+            return self.attn
+        return dataclasses.replace(self.attn, chunk_size=self.chunk_size)
 
     @property
     def n_groups(self) -> int:

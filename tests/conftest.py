@@ -6,6 +6,14 @@ import numpy as np
 import pytest
 
 
+def pytest_collection_modifyitems(items):
+    # tier-1 verify loop = everything that isn't a multi-minute subprocess
+    # compile; `make test-fast` runs `-m "tier1"`.
+    for item in items:
+        if "slow" not in item.keywords:
+            item.add_marker(pytest.mark.tier1)
+
+
 @pytest.fixture(scope="session", autouse=True)
 def _x64():
     # kernels/core are validated in f64 where exactness matters; individual

@@ -56,8 +56,8 @@ def test_elastic_restore_resharding(tmp_path):
     explicit device_put shardings on 1 device — the mesh-agnostic path)."""
     t = _tree()
     save_checkpoint(str(tmp_path), 5, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _make_mesh
+    mesh = _make_mesh((1,), ("data",))
     sh = jax.tree.map(
         lambda _: jax.NamedSharding(mesh, jax.sharding.PartitionSpec()), t)
     restored, step, _ = load_checkpoint(str(tmp_path), t, shardings=sh)

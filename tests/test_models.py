@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.attention import AttentionSpec
 from repro.configs import all_arch_ids, get_smoke_config
 from repro.models import (decode_step, init_decode_state, init_model,
                           model_loss)
@@ -23,6 +24,7 @@ def _batch(cfg, rng, b=2, n=32):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", all_arch_ids())
 def test_arch_smoke_train_step(arch):
     rng = np.random.default_rng(0)
@@ -38,6 +40,7 @@ def test_arch_smoke_train_step(arch):
     assert float(gnorm) > 0.0, arch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", all_arch_ids())
 def test_arch_smoke_decode_step(arch):
     rng = np.random.default_rng(1)
@@ -65,6 +68,7 @@ def test_arch_smoke_decode_step(arch):
     assert changed, arch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2.5-32b", "jamba-v0.1-52b",
                                   "xlstm-1.3b", "deepseek-v2-236b"])
 def test_prefill_decode_equals_forward(arch):
@@ -94,7 +98,7 @@ def test_backend_swap_softmax_vs_fastmax():
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 24)), jnp.int32)
     outs = {}
     for backend in ("fastmax2", "fastmax1", "softmax"):
-        c = dataclasses.replace(cfg, attn_backend=backend)
+        c = dataclasses.replace(cfg, attn=AttentionSpec.parse(backend))
         logits, _ = forward_lm(params, toks, c)
         assert bool(jnp.all(jnp.isfinite(logits))), backend
         outs[backend] = logits
@@ -103,13 +107,14 @@ def test_backend_swap_softmax_vs_fastmax():
 
 
 def test_kernel_impl_matches_chunked_in_model():
-    """attn_impl='kernel' (interpret on CPU) == attn_impl='chunked'."""
+    """impl='kernel' (interpret on CPU) == impl='chunked'."""
     rng = np.random.default_rng(4)
     cfg = get_smoke_config("granite-20b")
     params, _ = init_model(jax.random.PRNGKey(0), cfg)
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 24)), jnp.int32)
     l1, _ = forward_lm(params, toks, cfg)
-    cfg_k = dataclasses.replace(cfg, attn_impl="kernel")
+    cfg_k = dataclasses.replace(
+        cfg, attn=dataclasses.replace(cfg.attn, impl="kernel"))
     l2, _ = forward_lm(params, toks, cfg_k)
     np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
                                rtol=2e-4, atol=2e-4)

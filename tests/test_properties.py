@@ -2,7 +2,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (requirements-dev.txt); skip, don't "
+           "abort collection, when absent")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import fastmax_attention
 from repro.core.ref import (fastmax_attention_matrix_ref, normalize_qk,

@@ -101,6 +101,7 @@ _SUBPROC = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2.5-32b", "kimi-k2-1t-a32b"])
 def test_dryrun_8dev_subprocess(arch):
     """End-to-end sharded lower+compile on a 4x2 virtual mesh; collectives
