@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-attention bench
+.PHONY: test test-fast test-attention test-kernels bench bench-json
 
 # full tier-1 suite (everything, incl. multi-minute subprocess compiles)
 test:
@@ -10,6 +10,7 @@ test:
 # sharding/dryrun subprocess compiles, e2e driver runs, per-arch
 # integration sweeps). ~2 min on a 1-CPU container, dominated by the f64
 # operator-equivalence sweeps; the excluded tests still run under `test`.
+# Includes the `kernels` marker subset (see test-kernels for just those).
 test-fast:
 	$(PY) -m pytest -q -m "tier1 and not slow"
 
@@ -17,5 +18,14 @@ test-fast:
 test-attention:
 	$(PY) -m pytest -q tests/test_attention_api.py
 
+# just the Pallas kernel validation (fwd/bwd/decode interpret equivalence)
+test-kernels:
+	$(PY) -m pytest -q -m "kernels and not slow"
+
 bench:
 	$(PY) -m benchmarks.run --quick
+
+# per-phase attention timings -> BENCH_attention.json (the committed perf
+# baseline); prints a fail-soft warning when >20% slower than the baseline
+bench-json:
+	$(PY) -m benchmarks.run --only attn_phases --json BENCH_attention.json

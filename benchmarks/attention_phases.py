@@ -1,0 +1,104 @@
+"""Per-phase attention benchmark: prefill / decode / backward per backend.
+
+The perf-trajectory suite behind `BENCH_attention.json` (make bench-json):
+one row per (backend, phase) so the prefill, single-token decode, and
+training-backward costs of fastmax-kernel vs fastmax-chunked vs softmax are
+tracked across PRs. All three phases go through the production surfaces
+(`repro.attention` prefill/step protocol + `attention()` dispatcher), so a
+routing regression shows up here too.
+
+On CPU the Pallas backends run in interpret mode (REPRO_DECODE_KERNEL=1 is
+set for the fastmax-kernel decode row so the kernel path is exercised, not
+the jnp fallback) — absolute numbers are only comparable within a machine,
+which is exactly what a committed per-repo baseline is for.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+
+SPECS = ("softmax", "fastmax2", "fastmax2-kernel")
+
+
+def _mk(rng, b, hq, hkv, n, d, dv, dtype):
+    import jax.numpy as jnp
+    q = jnp.asarray(rng.normal(size=(b, hq, n, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, n, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, n, dv)), dtype)
+    return q, k, v
+
+
+def _bench_spec(name: str, *, b, hq, hkv, n, d, dv, n_steps, iters):
+    import jax
+    import jax.numpy as jnp
+    from repro.attention import (AttentionSpec, attention, init_state,
+                                 prefill, step)
+
+    spec = AttentionSpec.parse(name)
+    rng = np.random.default_rng(0)
+    q, k, v = _mk(rng, b, hq, hkv, n, d, dv, jnp.float32)
+    q1, k1, v1 = _mk(rng, b, hq, hkv, 1, d, dv, jnp.float32)
+
+    st0 = init_state(spec, batch=b, n_kv_heads=hkv, q_head_dim=d,
+                     v_head_dim=dv, max_len=n + n_steps)
+
+    prefill_fn = jax.jit(lambda q, k, v, st: prefill(q, k, v, spec, state=st))
+    _, st = prefill_fn(q, k, v, st0)
+    t_prefill = time_fn(lambda: prefill_fn(q, k, v, st0)[0], iters=iters)
+
+    step_fn = jax.jit(lambda st, q, k, v: step(st, q, k, v, spec))
+    t_decode = time_fn(lambda: step_fn(st, q1, k1, v1)[0], iters=iters)
+
+    grad_fn = jax.jit(jax.grad(
+        lambda q, k, v: jnp.sum(attention(q, k, v, spec, causal=True)),
+        argnums=(0, 1, 2)))
+    t_backward = time_fn(lambda: grad_fn(q, k, v), iters=iters)
+
+    return {
+        "prefill_us": t_prefill * 1e6,
+        "decode_us": t_decode * 1e6,
+        "backward_us": t_backward * 1e6,
+    }
+
+
+def collect(quick: bool = True) -> dict:
+    """Structured results: {meta, suites: {backend: {phase_us: float}}}."""
+    import jax
+
+    shape = (dict(b=1, hq=4, hkv=2, n=256, d=16, dv=16, n_steps=4, iters=5)
+             if quick else
+             dict(b=2, hq=8, hkv=4, n=2048, d=64, dv=64, n_steps=8, iters=5))
+    # exercise the native-state decode kernel (interpret off-TPU), not the
+    # jnp fallback — this suite tracks the kernel path
+    prev = os.environ.get("REPRO_DECODE_KERNEL")
+    os.environ["REPRO_DECODE_KERNEL"] = "1"
+    try:
+        suites = {name: _bench_spec(name, **shape) for name in SPECS}
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_DECODE_KERNEL", None)
+        else:
+            os.environ["REPRO_DECODE_KERNEL"] = prev
+    return {
+        "meta": {
+            "platform": jax.default_backend(),
+            "quick": quick,
+            "shape": shape,
+        },
+        "suites": suites,
+    }
+
+
+def rows(results: dict):
+    """CSV rows for a `collect()` result — the one place the
+    `attn_phases/<suite>/<phase>` naming lives."""
+    for name, phases in results["suites"].items():
+        for phase, us in phases.items():
+            yield csv_row(f"attn_phases/{name}/{phase[:-3]}", us)
+
+
+def run(quick: bool = True):
+    yield from rows(collect(quick=quick))

@@ -2,12 +2,44 @@
 
 Prints ``name,us_per_call,derived`` CSV. Quick mode by default (CPU);
 ``--full`` runs the paper-scale variants of each.
+
+``--json [PATH]`` additionally runs the per-phase attention suite
+(`attention_phases.py`) and writes its structured results (default
+``BENCH_attention.json`` — the committed perf baseline). When the output
+file already exists it is treated as the baseline: a one-line regression
+summary is printed (fail-soft WARNING when any phase is >20% slower on the
+same platform) before the file is overwritten.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+REGRESSION_THRESHOLD = 1.20
+
+
+def _regression_summary(baseline: dict, fresh: dict) -> str:
+    """One line comparing fresh phase timings to the committed baseline."""
+    if baseline.get("meta", {}).get("platform") != \
+            fresh.get("meta", {}).get("platform") or \
+            baseline.get("meta", {}).get("quick") != \
+            fresh.get("meta", {}).get("quick"):
+        return ("bench-json: baseline platform/mode differs — regression "
+                "check skipped")
+    slow = []
+    for suite, phases in fresh.get("suites", {}).items():
+        base_p = baseline.get("suites", {}).get(suite, {})
+        for phase, us in phases.items():
+            b = base_p.get(phase)
+            if b and us > b * REGRESSION_THRESHOLD:
+                slow.append(f"{suite}/{phase[:-3]} {b:.0f}->{us:.0f}us")
+    if slow:
+        return ("bench-json: WARNING — >20% slower than baseline: "
+                + "; ".join(slow))
+    return "bench-json: OK (no >20% regressions vs baseline)"
 
 
 def main() -> None:
@@ -15,12 +47,19 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,table2,fig6,fig2,"
-                         "table1,fig4")
+                         "table1,fig4,attn_phases")
+    ap.add_argument("--json", nargs="?", const="BENCH_attention.json",
+                    default=None, metavar="PATH",
+                    help="run the attention phase suite and write its "
+                         "structured results (default BENCH_attention.json);"
+                         " prints a fail-soft regression summary against "
+                         "the existing file")
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (fig2_dropout, fig3_scaling, fig4_attnmap,
-                            fig6_loss, table1_lra_lite, table2_throughput)
+    from benchmarks import (attention_phases, fig2_dropout, fig3_scaling,
+                            fig4_attnmap, fig6_loss, table1_lra_lite,
+                            table2_throughput)
 
     suites = {
         "fig3": fig3_scaling.run,
@@ -29,10 +68,14 @@ def main() -> None:
         "fig2": fig2_dropout.run,
         "table1": table1_lra_lite.run,
         "fig4": fig4_attnmap.run,
+        "attn_phases": attention_phases.run,
     }
     if args.only:
         keep = set(args.only.split(","))
         suites = {k: v for k, v in suites.items() if k in keep}
+    if args.json:
+        # the JSON path subsumes the CSV rows of the phase suite
+        suites.pop("attn_phases", None)
 
     print("name,us_per_call,derived")
     for name, fn in suites.items():
@@ -44,6 +87,26 @@ def main() -> None:
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
         print(f"{name}/elapsed,{(time.time() - t0) * 1e6:.0f},",
               flush=True)
+
+    if args.json:
+        fresh = attention_phases.collect(quick=quick)
+        for row in attention_phases.rows(fresh):
+            print(row, flush=True)
+        if os.path.exists(args.json):
+            try:
+                with open(args.json) as f:
+                    baseline = json.load(f)
+                print(_regression_summary(baseline, fresh), flush=True)
+            except (json.JSONDecodeError, OSError) as e:
+                print(f"bench-json: baseline unreadable ({e}) — skipping "
+                      f"regression check", file=sys.stderr)
+        else:
+            print("bench-json: no baseline yet — writing first one",
+                  flush=True)
+        with open(args.json, "w") as f:
+            json.dump(fresh, f, indent=2)
+            f.write("\n")
+        print(f"bench-json: wrote {args.json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -20,17 +20,14 @@ __all__ = ["attention", "feature_shard_flag"]
 
 def feature_shard_flag(hkv: int) -> bool:
     """True when KV heads do NOT divide the 'model' axis of the active mesh
-    (GQA/MQA at TP degree > Hkv): the kv moment update would replicate
-    TP-ways, so fastmax switches to token-sharded updates (partial moments
-    + one small psum per chunk)."""
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or not mesh.axis_names:
-            from jax._src import mesh as mesh_lib
-            mesh = mesh_lib.thread_resources.env.physical_mesh
-    except Exception:
-        return False
-    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+    (GQA/MQA at TP degree > Hkv): head-sharding can't use the axis, so the
+    decode step switches to feature-TP — moments sharded on their feature
+    (Dv) dims, shard-local one-token deltas, and a feature-sharded combine
+    (`combine_with_queries(feature_shard=True)`)."""
+    from repro.sharding.rules import active_mesh
+
+    mesh = active_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
         return False
     return hkv % mesh.shape["model"] != 0
 
@@ -59,6 +56,12 @@ def attention(
         spec, causal=causal, dropout=dropout,
         kv_mask=kv_mask is not None, gqa=q.shape[1] != k.shape[1],
         strict=strict)
-    fs = backend.caps.feature_shard and feature_shard_flag(k.shape[1])
+    # Moment feature-TP is activated on the DECODE step only
+    # (repro.attention.state.step), where the TP=16 dryrun shows it
+    # partitions cleanly (0 involuntary-remat warnings, ~2x less ICI
+    # traffic). Constraining the full-sequence scan paths the same way
+    # currently triggers remats of the scan-stacked chunks — keep them
+    # unconstrained until the scan carries sharding-aware annotations
+    # (ROADMAP).
     return backend.fn(q, k, v, spec, causal=causal, kv_mask=kv_mask,
-                      rng=rng, feature_shard=fs)
+                      rng=rng, feature_shard=False)

@@ -132,11 +132,16 @@ register(Backend(
     fallback="fastmax-rowwise",   # dropout lives on the explicit-phi path
 ))
 
+# NOTE kv_mask stays False here even though the forward kernel threads a
+# mask: this capability describes the TRAINABLE attention() path, whose
+# custom_vjp backward assumes no mask (as does the jnp §2.5 backward) — a
+# masked call must reroute to chunked. The inference-only prefill protocol
+# (repro.attention.prefill) uses the kernel's mask support directly.
 register(Backend(
     name="fastmax-kernel",
     family="fastmax",
-    caps=Capabilities(decode=True, custom_grad=True, platforms=("tpu",),
-                      interpretable=True),
+    caps=Capabilities(decode=True, decode_kernel=True, custom_grad=True,
+                      platforms=("tpu",), interpretable=True),
     fn=_kernel_fn,
     fallback="fastmax-chunked",   # kv_mask / dropout reroute through chunked
 ))

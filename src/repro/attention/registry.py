@@ -55,10 +55,16 @@ class Capabilities:
     causal: bool = True
     noncausal: bool = True
     decode: bool = False          # has a constant/streaming decode path
+    decode_kernel: bool = False   # decode state lives in a fused Pallas
+    #                               kernel (native AttnState moment carry)
     dropout: bool = False         # paper Fig. 2 factorized dropout
     gqa: bool = True              # grouped-query attention (Hq != Hkv)
     kv_mask: bool = False         # exact padding-token masking
-    feature_shard: bool = False   # TP sharding of the moment feature dim
+    feature_shard: bool = False   # backend fn ACCEPTS moment feature-dim TP
+    #                               sharding; currently activated only by the
+    #                               decode step (repro.attention.state.step),
+    #                               not the full-sequence attention() path —
+    #                               see the note in api.attention()
     custom_grad: bool = False     # paper §2.5 memory-reduced backward
     platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu")
     interpretable: bool = False

@@ -10,28 +10,91 @@ One streaming-inference surface for every backend family:
 exactly one of (kv, moments) is populated. This protocol subsumes the seed's
 `repro.core.decode_state` module and the per-backend decode branches that
 lived in `repro.models.layers`.
+
+Backends declaring `decode_kernel` (fastmax-kernel) run prefill and step
+through the Pallas kernels on the SAME `Moments` carry: prefill's final
+moments are emitted by the forward kernel itself (no recompute pass) and
+each step is the fused update+combine decode kernel. Off-TPU the protocol
+falls back to the jnp moment step with one logged routing line
+(REPRO_DECODE_KERNEL=1 forces the kernel in interpret mode — tests/CI;
+=0 disables it everywhere).
 """
 from __future__ import annotations
 
+import os
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.attention.api import feature_shard_flag
-from repro.attention.registry import resolve
+from repro.attention.registry import _log_once, resolve
 from repro.attention.spec import AttentionSpec
 from repro.core.decode_state import init_fastmax_state
 from repro.core.fastmax import (
     Moments,
     _causal_scan,
+    _constrain_moments_j,
     combine_with_queries,
     compute_moments,
     normalize_qk,
 )
 from repro.core.softmax import softmax_attention
 
-__all__ = ["KVCache", "AttnState", "init_state", "prefill", "step"]
+__all__ = ["KVCache", "AttnState", "init_state", "prefill", "step",
+           "use_decode_kernel"]
+
+
+def use_decode_kernel(spec: AttentionSpec) -> bool:
+    """True when this spec's decode should run the fused Pallas kernels.
+
+    Requires a backend with the `decode_kernel` capability (fastmax-kernel).
+    On TPU that routes decode to the kernel; elsewhere the jnp moment step
+    is the fallback (logged once). REPRO_DECODE_KERNEL=1 forces the kernel
+    (interpret mode off-TPU); =0 disables it even on TPU.
+    """
+    if spec.family == "softmax":
+        return False
+    backend = resolve(spec, causal=True)
+    if not backend.caps.decode_kernel:
+        return False
+    env = os.environ.get("REPRO_DECODE_KERNEL", "auto").lower()
+    if env in ("0", "off", "never"):
+        _log_once(f"decode: {backend.name} kernel disabled "
+                  f"(REPRO_DECODE_KERNEL={env})")
+        return False
+    if env in ("1", "force", "always"):
+        _log_once(f"decode: {backend.name} native-state kernel (forced; "
+                  f"interpret off-TPU)")
+        return True
+    mesh = _active_model_mesh()
+    if mesh is not None:
+        # the decode kernel is not shard_map-wrapped yet: under tensor
+        # parallelism the jnp moment step is the verified feature-TP path
+        # (remat-clean TP=16 dryrun) — route there until the kernel carries
+        # its own partitioning (ROADMAP)
+        _log_once(
+            f"decode: {backend.name} kernel not yet sharded over 'model' "
+            f"(size {mesh.shape['model']}) -> jnp feature-TP moment step")
+        return False
+    if jax.default_backend() == "tpu":
+        _log_once(f"decode: {backend.name} native-state kernel")
+        return True
+    _log_once(
+        f"decode: {backend.name} targets tpu; platform="
+        f"{jax.default_backend()} -> jnp moment step fallback")
+    return False
+
+
+def _active_model_mesh():
+    """The active mesh when it tensor-parallelizes over 'model', else None."""
+    from repro.sharding.rules import active_mesh
+
+    mesh = active_mesh()
+    if mesh is not None and "model" in mesh.axis_names \
+            and mesh.shape["model"] > 1:
+        return mesh
+    return None
 
 
 class KVCache(NamedTuple):
@@ -106,10 +169,21 @@ def prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     spec_r = spec.resolved()
     qh = normalize_qk(q) if spec.normalize else q
     kh = normalize_qk(k) if spec.normalize else k
+    if use_decode_kernel(spec):
+        # one kernel launch yields outputs AND the final carry — the
+        # prefill→decode handoff without recomputing moments
+        from repro.kernels import ops as kernel_ops
+        o, state = kernel_ops.fastmax_prefill_kernel(
+            qh, kh, v, p=spec.p, chunk_size=spec_r.chunk_size,
+            denom_eps=spec.denom_eps, kv_mask=kv_mask)
+        return o.astype(q.dtype), AttnState(kv=None,
+                                            moments=Moments(*state))
+    # NOTE: no feature_shard here — constraining the prefill scan's carry
+    # causes involuntary remats of the stacked chunks (see attention());
+    # feature-TP is applied on the per-token decode step below.
     o, final = _causal_scan(
         qh, kh, v, p=spec.p, chunk_size=spec_r.chunk_size, kv_mask=kv_mask,
-        denom_eps=spec.denom_eps,
-        feature_shard=feature_shard_flag(k.shape[1]))
+        denom_eps=spec.denom_eps)
     return o.astype(q.dtype), AttnState(kv=None, moments=final)
 
 
@@ -138,11 +212,36 @@ def step(state: AttnState, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
     qh = normalize_qk(q) if spec.normalize else q
     kh = normalize_qk(k) if spec.normalize else k
-    new_mom = state.moments + compute_moments(kh, v, p=spec.p)
     hkv, hq = k.shape[1], q.shape[1]
+    if use_decode_kernel(spec):
+        from repro.kernels import ops as kernel_ops
+        o, new_state = kernel_ops.fastmax_decode(
+            qh, kh, v, state.moments, p=spec.p, denom_eps=spec.denom_eps)
+        return (o.astype(q.dtype),
+                AttnState(kv=None, moments=Moments(*new_state)))
+    # jnp moment step. Under tensor parallelism the moments are sharded on
+    # their feature (Dv / trailing-D) dims while q arrives head-sharded —
+    # constrain the delta, the running state, and the combine to consistent
+    # feature-TP so XLA never rematerializes a moment-sized tensor
+    # (ROADMAP serve-path item; see combine_with_queries(feature_shard=)).
+    fs = feature_shard_flag(hkv)
+    if fs:
+        # the new token's k/v are tiny — pin them model-replicated (keeping
+        # DP on batch) so every device builds ITS OWN feature slice of the
+        # moment delta locally; without this the delta (full moment size!)
+        # is produced head-sharded and resharded over the ICI every step
+        from repro.sharding.rules import replicate
+        kh = replicate(kh, batch_dim=0)
+        v = replicate(v, batch_dim=0)
+    delta = compute_moments(kh, v, p=spec.p)
+    if fs:
+        delta = _constrain_moments_j(delta)
+    new_mom = state.moments + delta
+    if fs:
+        new_mom = _constrain_moments_j(new_mom)
     # fold the query group into the token axis (no broadcast of the state)
     qg = qh.reshape(q.shape[0], hkv, hq // hkv, q.shape[-1])
-    num, den = combine_with_queries(qg, new_mom, p=spec.p)
+    num, den = combine_with_queries(qg, new_mom, p=spec.p, feature_shard=fs)
     o = num / (den + spec.denom_eps)[..., None]
     o = o.reshape(q.shape[0], hq, 1, -1).astype(q.dtype)
     return o, AttnState(kv=None, moments=new_mom)

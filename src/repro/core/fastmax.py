@@ -90,16 +90,12 @@ def _acc_dtype(x):
 
 
 def _pick_bm(d: int) -> int:
-    """m-block size: largest divisor of d with bm*d <= 2048.
-
-    The degree-2 terms are evaluated in m-blocks so no intermediate larger
-    than [..., n, bm*d] is ever materialized (the naive einsum builds
+    """m-block size for the XLA scan path: shared tiling policy
+    (repro.kernels.tiling) at the 2048-row scan budget, so no intermediate
+    larger than [..., n, bm*d] is ever materialized (the naive einsum builds
     [..., n, D, Dv] — gigabytes at production shapes)."""
-    best = 1
-    for bm in range(1, d + 1):
-        if d % bm == 0 and bm * d <= 2048:
-            best = bm
-    return best
+    from repro.kernels.tiling import SCAN_BM_BUDGET, pick_bm
+    return pick_bm(d, SCAN_BM_BUDGET)
 
 
 def compute_moments(
@@ -149,20 +145,42 @@ def compute_moments(
     return Moments(m0, m1, m2, _f32(g0), g1, g2)
 
 
-def combine_with_queries(q: jnp.ndarray, mom: Moments, *, p: int):
+def combine_with_queries(q: jnp.ndarray, mom: Moments, *, p: int,
+                         feature_shard: bool = False):
     """Per-query contraction with moments (paper Eqs. 26-27).
 
     q: [..., n, D]; moments broadcastable against q's batch dims.
     Returns (num [..., n, Dv], den [..., n]).
+
+    `feature_shard=True` (serve path under tensor parallelism, kv heads not
+    divisible by the 'model' axis): pin the queries replicated and every
+    numerator intermediate to 'model' on its feature (Dv) dim, matching the
+    moment shardings. Without these constraints XLA flip-flops between the
+    head sharding q arrives with and the feature sharding the moments carry,
+    and resolves the conflict by involuntarily rematerializing moment-sized
+    tensors on every decode step (the TP=16 serve-path remat warnings).
+    The only resharding left is the O(B Hq Dv) output — moment tensors never
+    move.
     """
     qf = _f32(q)
     acc = qf.dtype
+    if feature_shard:
+        from repro.sharding.rules import maybe_constraint
+        from repro.sharding.rules import replicate as _rep
+        replicate = lambda x: _rep(x, batch_dim=0)  # noqa: E731 — keep DP
+        qf = replicate(qf)
+        feat = lambda x: maybe_constraint(  # noqa: E731 — 'model' on Dv
+            x, ("pod", "data"), *((None,) * (x.ndim - 2) + ("model",)))
+    else:
+        feat = replicate = lambda x: x  # noqa: E731
     num = mom.m0[..., None, :] + jnp.einsum(
         "...nm,...mj->...nj", qf, mom.m1, preferred_element_type=acc
     )
-    den = mom.g0[..., None] + jnp.einsum(
+    num = feat(num)
+    den = mom.g0[..., None] + replicate(jnp.einsum(
         "...nm,...m->...n", qf, mom.g1, preferred_element_type=acc
-    )
+    ))
+    den = replicate(den)
     if p >= 2:
         d = qf.shape[-1]
         dv = mom.m2.shape[-1]
@@ -173,14 +191,19 @@ def combine_with_queries(q: jnp.ndarray, mom: Moments, *, p: int):
             y = y.reshape(*qf.shape[:-1], bm * d)          # [..., n, bm*D]
             z = mom.m2[..., s:s + bm, :, :]
             z = z.reshape(*mom.m2.shape[:-3], bm * d, dv)  # [..., bm*D, Dv]
-            c = jnp.einsum("...nf,...fj->...nj", y, z,
-                           preferred_element_type=acc)
+            c = feat(jnp.einsum("...nf,...fj->...nj", y, z,
+                                preferred_element_type=acc))
             num2 = c if num2 is None else num2 + c
-        num = num + 0.5 * num2
-        den = den + 0.5 * jnp.einsum(
-            "...nm,...ml,...nl->...n", qf, mom.g2, qf,
-            preferred_element_type=acc,
-        )
+        num = feat(num + 0.5 * num2)
+        # two explicit steps so the q·g2 intermediate keeps the moments'
+        # feature sharding ('model' on l) and the scalar contraction over l
+        # becomes a partial-sum + psum instead of a g2 reshard
+        t = jnp.einsum("...nm,...ml->...nl", qf, mom.g2,
+                       preferred_element_type=acc)
+        t = feat(t)
+        den = den + 0.5 * replicate(jnp.einsum(
+            "...nl,...nl->...n", t, qf, preferred_element_type=acc))
+        den = replicate(den)
     return num, den
 
 
@@ -250,27 +273,19 @@ def _constrain_moments_j(mom: Moments) -> Moments:
     the moment tensors over 'model' — the phi2 combine then splits TP-ways
     with no extra collectives (beyond the row-parallel wo psum). Beyond-
     paper: Megatron row-parallelism on the factorized-attention feature
-    dim."""
+    dim. The batch dim keeps its DP axes: a with_sharding_constraint is
+    total, so leaving dim 0 out would force a batch all-gather of the
+    moment state every step."""
     from repro.sharding.rules import maybe_constraint
 
     def j_shard(x):
         if x.ndim < 3:
             return x
-        return maybe_constraint(x, *((None,) * (x.ndim - 1) + ("model",)))
+        return maybe_constraint(
+            x, ("pod", "data"), *((None,) * (x.ndim - 2) + ("model",)))
 
     return Moments(j_shard(mom.m0), j_shard(mom.m1), j_shard(mom.m2),
                    mom.g0, mom.g1, mom.g2)
-
-
-def _token_shard(x):
-    """Shard the token axis (-2) of a chunk over 'model': the moment UPDATE
-    (a contraction over tokens) then computes 1/TP of the sum per device and
-    XLA inserts one psum of the (small, O(D^2 Dv)) moment delta per chunk.
-    This is how the update parallelizes when kv-heads < TP degree (GQA/MQA:
-    kv moments are otherwise replicated TP-ways). Beyond-paper."""
-    from repro.sharding.rules import maybe_constraint
-    return maybe_constraint(
-        x, *((None,) * (x.ndim - 2) + ("model", None)))
 
 
 def _combine_grouped(qg, mom: Moments, *, p: int):

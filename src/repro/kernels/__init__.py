@@ -1,8 +1,23 @@
 """Pallas TPU kernels for the Fastmax hot paths (+ interpret-mode fallback).
 
-fastmax_causal.py    — chunked prefix-scan causal attention (training)
-fastmax_noncausal.py — two-phase moments+combine (encoder / cross-attn)
-fastmax_decode.py    — fused state-update + combine for serving
-ops.py               — jit'd dispatchers; ref.py — pure-jnp oracle
+fastmax_causal.py     — chunked prefix-scan causal attention (training fwd,
+                        optionally emitting the final moment carry)
+fastmax_causal_bwd.py — fused reversible-carry causal backward (paper §2.5)
+fastmax_noncausal.py  — two-phase moments+combine (encoder / cross-attn)
+fastmax_decode.py     — fused state-update + combine for serving
+tiling.py             — shared m-block tiling policy
+ops.py                — jit'd dispatchers; ref.py — pure-jnp oracle
+
+`ops` is imported lazily so leaf modules (tiling) stay importable from
+`repro.core` without a core <-> kernels import cycle.
 """
-from repro.kernels import ops  # noqa: F401
+from __future__ import annotations
+
+__all__ = ["ops"]
+
+
+def __getattr__(name):
+    if name == "ops":
+        import importlib
+        return importlib.import_module("repro.kernels.ops")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -36,6 +36,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.tiling import pick_bm
 
 __all__ = ["fastmax_causal_pallas"]
 
@@ -53,19 +54,20 @@ def _causal_kernel(
     v_ref,   # [1, C, Dv]
     w_ref,   # [1, C]       validity mask (1=real token, 0=padding)
     o_ref,   # [1, G, C, Dv]
-    m0_s,    # [1, Dv]      scratch: Σ w v
-    m1_s,    # [D, Dv]      scratch: Σ w k v^T
-    m2_s,    # [D*D, Dv]    scratch: Σ w (k⊗k) v^T   (p=2)
-    g0_s,    # [1, 1]
-    g1_s,    # [1, D]
-    g2_s,    # [D, D]       (p=2)
-    *,
+    *refs,   # [state outputs (emit_state)] + 6 moment scratch buffers
     p: int,
     bm: int,
     denom_eps: float,
     acc,
+    emit_state: bool,
 ):
+    if emit_state:
+        # final-carry outputs, m-major m2 — the decode kernel's native layout
+        (m0o, m1o, m2o, g0o, g1o, g2o) = refs[:6]
+        refs = refs[6:]
+    m0_s, m1_s, m2_s, g0_s, g1_s, g2_s = refs
     c = pl.program_id(1)
+    nc = pl.num_programs(1)
     g, cs, d = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
     dv = v_ref.shape[2]
 
@@ -138,31 +140,44 @@ def _causal_kernel(
 
         jax.lax.fori_loop(0, d // bm, mb_up, 0)
 
-
-def _pick_bm(d: int) -> int:
-    """Largest divisor of d with bm*d <= 512 (MXU-friendly inner tiles)."""
-    best = 1
-    for bm in range(1, d + 1):
-        if d % bm == 0 and bm * d <= 512:
-            best = bm
-    return best
+    if emit_state:
+        @pl.when(c == nc - 1)
+        def _emit_state():
+            m0o[0] = m0_s[...]
+            m1o[0] = m1_s[...]
+            g0o[0] = g0_s[...]
+            g1o[0] = g1_s[...]
+            if p >= 2:
+                m2o[0] = m2_s[...]
+                g2o[0] = g2_s[...]
+            else:
+                m2o[0] = jnp.zeros_like(m2o[0])
+                g2o[0] = jnp.zeros_like(g2o[0])
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("p", "chunk_size", "denom_eps", "interpret", "out_dtype"),
+    static_argnames=("p", "chunk_size", "denom_eps", "interpret", "out_dtype",
+                     "return_state"),
 )
 def fastmax_causal_pallas(
     q: jnp.ndarray,  # [B, Hq, N, D]  (pre-normalized q̂)
     k: jnp.ndarray,  # [B, Hkv, N, D] (pre-normalized k̂)
     v: jnp.ndarray,  # [B, Hkv, N, Dv]
+    kv_mask: jnp.ndarray | None = None,  # [B, Hkv|1, N] validity (1=real)
     *,
     p: int = 2,
     chunk_size: int = 128,
     denom_eps: float = 1e-6,
     interpret: bool = False,
     out_dtype=None,
-) -> jnp.ndarray:
+    return_state: bool = False,
+):
+    """Causal fastmax. With `return_state=True` additionally returns the
+    final moment carry as a tuple (m0, m1, m2, g0, g1, g2) with shapes
+    ([B,Hkv,Dv], [B,Hkv,D,Dv], [B,Hkv,D,D,Dv], [B,Hkv], [B,Hkv,D],
+    [B,Hkv,D,D]) in the accumulator dtype — emitted by the kernel itself
+    (no second pass over k/v), ready for streaming decode."""
     b, hq, n, d = q.shape
     hkv = k.shape[1]
     dv = v.shape[-1]
@@ -181,22 +196,48 @@ def fastmax_causal_pallas(
     vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))).reshape(
         b * hkv, nc * cs, dv)
     acc = jnp.promote_types(q.dtype, jnp.float32)
-    w = jnp.pad(jnp.ones((b * hkv, n), acc), ((0, 0), (0, pad)))
+    if kv_mask is None:
+        w = jnp.ones((b, hkv, n), acc)
+    else:
+        w = jnp.broadcast_to(kv_mask.astype(acc), (b, hkv, n))
+    w = jnp.pad(w, ((0, 0), (0, 0), (0, pad))).reshape(b * hkv, nc * cs)
 
-    bm = _pick_bm(d)
+    bm = pick_bm(d)
     kernel = functools.partial(_causal_kernel, p=p, bm=bm, denom_eps=denom_eps,
-                               acc=acc)
-    out = pl.pallas_call(
+                               acc=acc, emit_state=return_state)
+    bh = b * hkv
+    sm = lambda h, c: (h, 0, 0)           # noqa: E731 carry-state blocks
+    out_specs = [pl.BlockSpec((1, g, cs, dv), lambda h, c: (h, 0, c, 0))]
+    out_shape = [jax.ShapeDtypeStruct((bh, g, nc * cs, dv), out_dtype)]
+    if return_state:
+        m2_rows = d * d if p >= 2 else 1
+        out_specs += [
+            pl.BlockSpec((1, 1, dv), sm),
+            pl.BlockSpec((1, d, dv), sm),
+            pl.BlockSpec((1, m2_rows, dv), sm),
+            pl.BlockSpec((1, 1, 1), sm),
+            pl.BlockSpec((1, 1, d), sm),
+            pl.BlockSpec((1, d, d), sm),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((bh, 1, dv), acc),
+            jax.ShapeDtypeStruct((bh, d, dv), acc),
+            jax.ShapeDtypeStruct((bh, m2_rows, dv), acc),
+            jax.ShapeDtypeStruct((bh, 1, 1), acc),
+            jax.ShapeDtypeStruct((bh, 1, d), acc),
+            jax.ShapeDtypeStruct((bh, d, d), acc),
+        ]
+    outs = pl.pallas_call(
         kernel,
-        grid=(b * hkv, nc),
+        grid=(bh, nc),
         in_specs=[
             pl.BlockSpec((1, g, cs, d), lambda h, c: (h, 0, c, 0)),
             pl.BlockSpec((1, cs, d), lambda h, c: (h, c, 0)),
             pl.BlockSpec((1, cs, dv), lambda h, c: (h, c, 0)),
             pl.BlockSpec((1, cs), lambda h, c: (h, c)),
         ],
-        out_specs=pl.BlockSpec((1, g, cs, dv), lambda h, c: (h, 0, c, 0)),
-        out_shape=jax.ShapeDtypeStruct((b * hkv, g, nc * cs, dv), out_dtype),
+        out_specs=out_specs if return_state else out_specs[0],
+        out_shape=out_shape if return_state else out_shape[0],
         scratch_shapes=[
             pltpu.VMEM((1, dv), acc),
             pltpu.VMEM((d, dv), acc),
@@ -209,5 +250,20 @@ def fastmax_causal_pallas(
         interpret=interpret,
         name=f"fastmax_causal_p{p}",
     )(qp, kp, vp, w)
-    out = out.reshape(b, hkv, g, nc * cs, dv)[:, :, :, :n]
-    return out.reshape(b, hq, n, dv)
+    if not return_state:
+        outs = [outs]
+    out = outs[0].reshape(b, hkv, g, nc * cs, dv)[:, :, :, :n]
+    out = out.reshape(b, hq, n, dv)
+    if not return_state:
+        return out
+    m0, m1, m2, g0, g1, g2 = outs[1:]
+    state = (
+        m0.reshape(b, hkv, dv),
+        m1.reshape(b, hkv, d, dv),
+        (m2.reshape(b, hkv, d, d, dv) if p >= 2
+         else jnp.zeros((b, hkv, d, d, dv), acc)),
+        g0.reshape(b, hkv),
+        g1.reshape(b, hkv, d),
+        g2.reshape(b, hkv, d, d),
+    )
+    return out, state

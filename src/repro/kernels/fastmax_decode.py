@@ -23,7 +23,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import tpu_compiler_params
-from repro.kernels.fastmax_causal import _pick_bm
+from repro.kernels.tiling import pick_bm
 
 __all__ = ["fastmax_decode_pallas"]
 
@@ -111,7 +111,7 @@ def fastmax_decode_pallas(
     g1r = g1.reshape(bh, 1, d).astype(acc)
     g2r = g2.reshape(bh, d, d).astype(acc)
 
-    bm = _pick_bm(d)
+    bm = pick_bm(d)
     nmb = d // bm if p >= 2 else 1
     m2_rows = bm * d if p >= 2 else 1
 

@@ -27,7 +27,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import tpu_compiler_params
-from repro.kernels.fastmax_causal import _pick_bm, _poly
+from repro.kernels.fastmax_causal import _poly
+from repro.kernels.tiling import pick_bm
 
 __all__ = ["fastmax_noncausal_pallas"]
 
@@ -141,7 +142,7 @@ def fastmax_noncausal_pallas(
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, padq), (0, 0))).reshape(
         b, hkv, g, nqc * cq, d).reshape(b * hkv, g, nqc * cq, d)
 
-    bm = _pick_bm(d)
+    bm = pick_bm(d)
     nmb = d // bm if p >= 2 else 1
     m2_rows = bm * d if p >= 2 else 1
 

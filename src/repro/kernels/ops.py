@@ -7,26 +7,39 @@ Dispatch policy:
     that Mosaic would compile for TPU.
 
 Training gradients: the kernel forward is paired (via custom_vjp) with the
-memory-reduced chunked backward from `repro.core.fastmax` (paper §2.5) — the
-backward recomputes moments reversibly instead of storing per-chunk state.
+fused Pallas causal-backward kernel (`fastmax_causal_bwd.py`) implementing
+the paper §2.5 reversible-carry recomputation in VMEM. The forward kernel
+itself emits the final moment carry as the only extra residual beyond
+(q, k, v) — O(D^{p+1}), not O(N D^p), and with no second jnp pass over the
+sequence. The jnp chunked backward (`_causal_scan_cg_bwd`) remains wired in
+as an interpret-mode oracle, selectable via REPRO_FASTMAX_BWD=jnp.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import fastmax as _fm
 from repro.kernels.fastmax_causal import fastmax_causal_pallas
+from repro.kernels.fastmax_causal_bwd import fastmax_causal_bwd_pallas
 from repro.kernels.fastmax_decode import fastmax_decode_pallas
 from repro.kernels.fastmax_noncausal import fastmax_noncausal_pallas
 
-__all__ = ["fastmax", "fastmax_decode", "use_interpret"]
+__all__ = ["fastmax", "fastmax_prefill_kernel", "fastmax_decode",
+           "use_interpret", "use_pallas_bwd"]
 
 
 def use_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def use_pallas_bwd() -> bool:
+    """Backward schedule: the fused Pallas kernel unless REPRO_FASTMAX_BWD
+    selects the jnp §2.5 chunked scan (the equivalence oracle)."""
+    return os.environ.get("REPRO_FASTMAX_BWD", "pallas").lower() != "jnp"
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
@@ -37,19 +50,34 @@ def _fastmax_causal_trainable(q, k, v, p, chunk_size, denom_eps, interpret):
 
 
 def _fc_fwd(q, k, v, p, chunk_size, denom_eps, interpret):
-    o = fastmax_causal_pallas(
+    # the forward kernel emits its own final carry (m-major moments) — the
+    # only residual the reversible backward needs beyond (q, k, v):
+    # O(D^{p+1}) bytes, and no extra jnp pass over the full sequence (the
+    # former `compute_moments` call here spiked peak memory at long N).
+    o, state = fastmax_causal_pallas(
         q, k, v, p=p, chunk_size=chunk_size, denom_eps=denom_eps,
-        interpret=interpret)
-    # full-sequence moments: the only extra residual the reversible
-    # backward needs beyond (q, k, v) — O(D^{p+1}), not O(N D^p).
-    mom = _fm.compute_moments(k, v, p=p)
-    return o, (q, k, v, mom)
+        interpret=interpret, return_state=True)
+    if p < 2:
+        # don't hold the [B,Hkv,D,D,Dv] zeros placeholder live as a
+        # residual — at p=1 both backwards ignore/rebuild it
+        state = state[:2] + (None,) + state[3:]
+    return o, (q, k, v, state)
 
 
 def _fc_bwd(p, chunk_size, denom_eps, interpret, res, do):
-    q, k, v, final = res
+    q, k, v, state = res
+    if use_pallas_bwd():
+        return fastmax_causal_bwd_pallas(
+            q, k, v, state, do, p=p, chunk_size=chunk_size,
+            denom_eps=denom_eps, interpret=interpret)
+    # jnp oracle: the §2.5 chunked reverse scan on the same kernel-emitted
+    # carry (kept for equivalence testing and as an escape hatch)
+    if p < 2:
+        d, dv = q.shape[-1], v.shape[-1]
+        m2 = jnp.zeros(k.shape[:2] + (d, d, dv), state[0].dtype)
+        state = state[:2] + (m2,) + state[3:]
     return _fm._causal_scan_cg_bwd(p, chunk_size, denom_eps, False,
-                                   (q, k, v, final), do)
+                                   (q, k, v, _fm.Moments(*state)), do)
 
 
 _fastmax_causal_trainable.defvjp(_fc_fwd, _fc_bwd)
@@ -75,6 +103,25 @@ def fastmax(
     return fastmax_noncausal_pallas(
         q, k, v, p=p, chunk_size=chunk_size, denom_eps=denom_eps,
         interpret=interpret)
+
+
+def fastmax_prefill_kernel(
+    q, k, v, *, p: int = 2, chunk_size: int = 128, denom_eps: float = 1e-6,
+    kv_mask=None, interpret: bool | None = None,
+):
+    """Kernel-backed causal prefill on pre-normalized q̂/k̂ (distinct from
+    the jnp `repro.core.decode_state.fastmax_prefill`, which normalizes
+    internally and returns a `Moments` NamedTuple).
+
+    Returns (o, state): the final moment carry is emitted by the forward
+    kernel itself (no recompute pass), in the layout `fastmax_decode`
+    consumes natively — the prefill→decode handoff is one kernel launch.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    return fastmax_causal_pallas(
+        q, k, v, kv_mask, p=p, chunk_size=chunk_size, denom_eps=denom_eps,
+        interpret=interpret, return_state=True)
 
 
 def fastmax_decode(

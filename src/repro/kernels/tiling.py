@@ -1,0 +1,28 @@
+"""Shared tiling policy for the fastmax m-blocked degree-2 contractions.
+
+Both the jnp chunked scan (`repro.core.fastmax`) and the Pallas kernels
+block the degree-2 moment over its first index so the working tile is
+[bm*D, Dv] and the per-step intermediates are [*, bm*D]. The block size is
+the largest divisor of D whose flattened row count bm*D stays under a
+budget: ~512 rows for VMEM-resident kernel tiles (MXU-friendly inner
+matmuls), ~2048 for the XLA scan path (bounds the [..., N, bm*D]
+intermediate that the naive einsum would blow up to [..., N, D, Dv]).
+"""
+from __future__ import annotations
+
+import functools
+
+__all__ = ["pick_bm", "KERNEL_BM_BUDGET", "SCAN_BM_BUDGET"]
+
+KERNEL_BM_BUDGET = 512   # Pallas VMEM tiles
+SCAN_BM_BUDGET = 2048    # jnp chunked-scan intermediates
+
+
+@functools.lru_cache(maxsize=None)
+def pick_bm(d: int, budget: int = KERNEL_BM_BUDGET) -> int:
+    """Largest divisor of `d` with bm*d <= budget (always >= 1)."""
+    best = 1
+    for bm in range(1, d + 1):
+        if d % bm == 0 and bm * d <= budget:
+            best = bm
+    return best

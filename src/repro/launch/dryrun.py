@@ -18,7 +18,10 @@ Usage:
   python -m repro.launch.dryrun --all --mesh both --out results/dryrun
 """
 import argparse
+import contextlib
 import json
+import sys
+import tempfile
 import time
 import traceback
 
@@ -40,6 +43,44 @@ from repro.sharding import (batch_spec, decode_state_shardings,
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
 ICI_BW = 50e9                # bytes/s / link
+
+_REMAT_MSG = "Involuntary full rematerialization"
+
+
+@contextlib.contextmanager
+def _capture_xla_warnings(out: dict):
+    """Capture fd-2 around lower/compile: the SPMD partitioner logs
+    "Involuntary full rematerialization" from C++ (invisible to Python
+    logging). Records count + first lines in `out` and re-emits everything
+    to the real stderr, so the sharding-health signal becomes a machine-
+    checkable part of the dry-run result JSON (--assert-no-remat gates on
+    it)."""
+    sys.stderr.flush()
+    try:
+        saved = os.dup(2)
+    except OSError:
+        yield
+        return
+    with tempfile.TemporaryFile(mode="w+b") as tmp:
+        os.dup2(tmp.fileno(), 2)
+        try:
+            yield
+        finally:
+            # re-emit + record in the finally so a raising cell still
+            # surfaces XLA's stderr (compile errors!) and its remat count
+            sys.stderr.flush()
+            os.dup2(saved, 2)
+            os.close(saved)
+            tmp.seek(0)
+            text = tmp.read().decode("utf-8", "replace")
+            if text:
+                sys.stderr.write(text)
+                sys.stderr.flush()
+            remat = [ln for ln in text.splitlines() if _REMAT_MSG in ln]
+            out["xla_remat"] = {
+                "count": len(remat),
+                "lines": [ln[:400] for ln in remat[:8]],
+            }
 
 
 def _tree_size_bytes(tree) -> int:
@@ -91,7 +132,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     n_params = sum(int(jnp.prod(jnp.asarray(x.shape)))
                    for x in jax.tree.leaves(params_shapes))
 
-    with mesh:
+    xla_diag: dict = {}
+    with _capture_xla_warnings(xla_diag), mesh:
         param_sh = param_shardings(axes, params_shapes, mesh)
 
         if shape.kind == "train":
@@ -210,6 +252,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     out = {
         "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "xla_remat": xla_diag.get("xla_remat", {"count": 0, "lines": []}),
         "mesh": "2x16x16" if multi_pod else "16x16",
         "n_chips": int(n_chips),
         "attn_backend": cfg.attn.legacy_name,   # result-JSON back-compat key
@@ -249,10 +292,16 @@ def main():
     ap.add_argument("--mesh", default="single",
                     choices=["single", "multi", "both"])
     ap.add_argument("--attn", default=None,
-                    choices=[None, "fastmax1", "fastmax2", "softmax"])
+                    help="attention operator (AttentionSpec.parse name, "
+                         "e.g. softmax, fastmax2, fastmax2-kernel)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--quiet", action="store_true")
+    ap.add_argument("--assert-no-remat", action="store_true",
+                    help="fail a cell if the SPMD partitioner logged any "
+                         "'Involuntary full rematerialization' (sharding-"
+                         "annotation health gate; see ROADMAP serve-path "
+                         "item)")
     args = ap.parse_args()
 
     archs = all_arch_ids() if (args.all or args.arch is None) else [args.arch]
@@ -272,6 +321,12 @@ def main():
                     res = run_cell(arch, shape, multi_pod=multi,
                                    attn=args.attn)
                     status = "SKIP" if "skipped" in res else "OK"
+                    n_remat = res.get("xla_remat", {}).get("count", 0)
+                    if args.assert_no_remat and n_remat:
+                        status = "FAIL"
+                        failures += 1
+                        res["error"] = (f"{n_remat} involuntary full "
+                                        f"rematerialization warning(s)")
                 except Exception as e:  # noqa: BLE001 — report, keep going
                     res = {"arch": arch, "shape": shape,
                            "mesh": "multi" if multi else "single",

@@ -54,7 +54,8 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="reduced same-family config (CPU-runnable)")
     ap.add_argument("--attn", default=None,
-                    choices=[None, "fastmax1", "fastmax2", "softmax"])
+                    help="attention operator (AttentionSpec.parse name, "
+                         "e.g. softmax, fastmax2, fastmax2-kernel)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)

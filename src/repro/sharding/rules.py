@@ -24,27 +24,66 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["DEFAULT_RULES", "spec_for", "param_shardings", "batch_spec",
-           "decode_state_shardings", "maybe_constraint"]
+           "decode_state_shardings", "maybe_constraint", "replicate",
+           "active_mesh"]
+
+
+def active_mesh():
+    """The mesh sharding constraints should target, or None.
+
+    One place for the JAX-version-sensitive discovery dance:
+    `get_abstract_mesh` where it exists (newer JAX), falling back to the
+    legacy `with mesh:` thread-resources env (0.4.x — where the abstract-
+    mesh accessor is absent and the naive call raises; a stale copy of
+    this fallback once left `feature_shard_flag` returning False on every
+    call, so keep the logic HERE only)."""
+    mesh = None
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        mesh = None
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        try:
+            from jax._src import mesh as mesh_lib
+            mesh = mesh_lib.thread_resources.env.physical_mesh
+        except Exception:
+            return None
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        return None
+    return mesh
+
+
+def replicate(x, *, batch_dim=None):
+    """with_sharding_constraint to model-replicated; no-op without an active
+    mesh. Used to pin small tensors (queries/denominators on the serve
+    combine path) so XLA doesn't propagate a large-tensor sharding conflict
+    through them. `batch_dim` keeps data parallelism on that dim (greedy
+    pod/data axes when they divide it) while every other dim is pinned
+    replicated."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    entries = [None] * x.ndim
+    if batch_dim is not None:
+        chosen = []
+        prod = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names and x.shape[batch_dim] > 1 \
+                    and x.shape[batch_dim] % (prod * mesh.shape[a]) == 0:
+                chosen.append(a)
+                prod *= mesh.shape[a]
+        if chosen:
+            entries[batch_dim] = (chosen[0] if len(chosen) == 1
+                                  else tuple(chosen))
+    return jax.lax.with_sharding_constraint(x, P(*entries))
 
 
 def maybe_constraint(x, *want_axes):
     """with_sharding_constraint that degrades gracefully: applies only the
     axes present in the active mesh AND dividing the dim; no-op without a
     mesh (smoke tests on 1 device)."""
-    mesh = None
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-    except Exception:
-        pass
-    if mesh is None or not mesh.axis_names:
-        # `with mesh:` sets the legacy thread-resources env, not the
-        # abstract mesh — fall back to it so constraints apply there too
-        try:
-            from jax._src import mesh as mesh_lib
-            mesh = mesh_lib.thread_resources.env.physical_mesh
-        except Exception:
-            return x
-    if mesh is None or not getattr(mesh, "axis_names", ()):
+    mesh = active_mesh()
+    if mesh is None:
         return x
     used: set = set()
     entries = []

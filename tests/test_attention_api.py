@@ -332,3 +332,66 @@ def test_chunk_size_inheritance_from_model_config():
 def test_registry_backend_lookup_error():
     with pytest.raises(KeyError):
         get_backend("does-not-exist")
+
+
+# ---------------------------------------------------------------------------
+# decode_kernel capability + native-state kernel routing
+# ---------------------------------------------------------------------------
+
+
+def test_decode_kernel_capability_declared():
+    assert get_backend("fastmax-kernel").caps.decode_kernel
+    assert not get_backend("fastmax-chunked").caps.decode_kernel
+    assert not get_backend("softmax").caps.decode_kernel
+
+
+def test_use_decode_kernel_env_routing(monkeypatch, caplog):
+    import logging
+
+    from repro.attention.state import use_decode_kernel
+
+    spec = AttentionSpec(family="fastmax", impl="kernel")
+    caplog.set_level(logging.INFO, logger="repro.attention")
+    # off-TPU default: logged fallback to the jnp moment step
+    monkeypatch.delenv("REPRO_DECODE_KERNEL", raising=False)
+    if jax.default_backend() != "tpu":
+        assert not use_decode_kernel(spec)
+    # forced: kernel path even off-TPU (interpret)
+    monkeypatch.setenv("REPRO_DECODE_KERNEL", "1")
+    assert use_decode_kernel(spec)
+    # disabled: never the kernel
+    monkeypatch.setenv("REPRO_DECODE_KERNEL", "0")
+    assert not use_decode_kernel(spec)
+    # only backends with the capability route to the kernel
+    monkeypatch.setenv("REPRO_DECODE_KERNEL", "1")
+    assert not use_decode_kernel(AttentionSpec(family="fastmax",
+                                               impl="chunked"))
+    assert not use_decode_kernel(AttentionSpec(family="softmax"))
+    from repro.attention import registry as _reg
+    assert any("native-state kernel" in m for m in _reg._LOGGED)
+
+
+def test_prefill_step_kernel_path_matches_oracle(monkeypatch):
+    """The forced kernel decode path (prefill carry emitted by the forward
+    kernel + fused decode steps) reproduces full causal attention."""
+    monkeypatch.setenv("REPRO_DECODE_KERNEL", "1")
+    spec = AttentionSpec(family="fastmax", p=2, impl="kernel", chunk_size=8)
+    rng = np.random.default_rng(9)
+    b, hq, hkv, n, d = 1, 4, 2, 21, 8
+    q, k, v = mk(rng, b, hq, hkv, n, d, d)
+    full = attention(q, k, v, dataclasses.replace(spec, impl="oracle"),
+                     causal=True)
+    st = init_state(spec, batch=b, n_kv_heads=hkv, q_head_dim=d,
+                    v_head_dim=d, max_len=n, dtype=jnp.float64)
+    pre = 13
+    o_pre, st = prefill(q[:, :, :pre], k[:, :, :pre], v[:, :, :pre], spec,
+                        state=st)
+    np.testing.assert_allclose(np.asarray(o_pre),
+                               np.asarray(full[:, :, :pre]),
+                               rtol=1e-6, atol=1e-7)
+    for t in range(pre, n):
+        o_t, st = step(st, q[:, :, t:t + 1], k[:, :, t:t + 1],
+                       v[:, :, t:t + 1], spec)
+        np.testing.assert_allclose(np.asarray(o_t[:, :, 0]),
+                                   np.asarray(full[:, :, t]),
+                                   rtol=1e-6, atol=1e-7)

@@ -7,10 +7,13 @@ import pytest
 
 from repro.core import init_fastmax_state
 from repro.core.ref import normalize_qk
-from repro.kernels.ops import fastmax, fastmax_decode
+from repro.kernels.ops import (fastmax, fastmax_decode,
+                               fastmax_prefill_kernel)
 from repro.kernels.ref import fastmax_decode_ref, fastmax_ref
 
 jax.config.update("jax_enable_x64", True)
+
+pytestmark = pytest.mark.kernels
 
 
 def mk(rng, b, hq, hkv, n, d, dv, dtype):
@@ -90,6 +93,124 @@ def test_kernel_gradient_matches_chunked():
     for a, b in zip(gk, gj):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-8, atol=1e-10)
+
+
+@pytest.mark.parametrize("shape", [(1, 2, 1, 40, 8, 8),   # GQA g=2
+                                   (1, 4, 2, 33, 8, 8),   # padding 33->48
+                                   (1, 8, 2, 64, 8, 16)])  # g=4, Dv != D
+@pytest.mark.parametrize("p", [1, 2])
+def test_pallas_bwd_matches_jnp_bwd_f64(shape, p):
+    """Fused Pallas backward == jnp §2.5 chunked reverse scan (the oracle
+    it replaces on the hot path)."""
+    import repro.core.fastmax as fm
+    rng = np.random.default_rng(hash((shape, p)) % 2**31)
+    q, k, v = mk(rng, *shape, jnp.float64)
+
+    def loss_k(q, k, v):
+        return jnp.sum(jnp.sin(fastmax(q, k, v, p=p, causal=True,
+                                       chunk_size=16, interpret=True)))
+
+    def loss_j(q, k, v):
+        return jnp.sum(jnp.sin(fm.fastmax_causal_chunked(
+            q, k, v, p=p, chunk_size=16, custom_grad=True)))
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gj = jax.grad(loss_j, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gj):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-7, atol=1e-9)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 5e-2)])
+@pytest.mark.parametrize("p", [1, 2])
+def test_pallas_bwd_low_precision_vs_oracle_autodiff(dtype, tol, p):
+    """Low-precision inputs, fp32 accumulation: Pallas backward vs plain
+    autodiff through the chunked scan, both evaluated on the same inputs.
+    The 1e-5 f32 rel-err bound is the PR acceptance criterion."""
+    import repro.core.fastmax as fm
+    rng = np.random.default_rng(17 + p)
+    q, k, v = mk(rng, 1, 4, 2, 48, 8, 8, dtype)
+
+    def loss_k(q, k, v):
+        return jnp.sum(fastmax(q, k, v, p=p, causal=True, chunk_size=16,
+                               interpret=True))
+
+    def loss_o(q, k, v):
+        return jnp.sum(fm.fastmax_causal_chunked(
+            q, k, v, p=p, chunk_size=16, custom_grad=False))
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    go = jax.grad(loss_o, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, go):
+        a = np.asarray(a, np.float64)
+        b = np.asarray(b, np.float64)
+        rel = np.abs(a - b).max() / max(np.abs(b).max(), 1e-6)
+        assert rel <= tol, f"rel err {rel} > {tol}"
+
+
+def test_jnp_bwd_oracle_stays_wired(monkeypatch):
+    """REPRO_FASTMAX_BWD=jnp reroutes the custom_vjp backward rule to the
+    jnp §2.5 reverse scan (the interpret-mode oracle escape hatch); both
+    rules produce the same cotangents from the same kernel-emitted
+    residual."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(21)
+    q, k, v = mk(rng, 1, 2, 1, 32, 8, 8, jnp.float64)
+    do = jnp.asarray(rng.normal(size=(1, 2, 32, 8)), jnp.float64)
+    _, res = ops._fc_fwd(q, k, v, 2, 16, 1e-6, True)
+    assert ops.use_pallas_bwd()
+    g_pallas = ops._fc_bwd(2, 16, 1e-6, True, res, do)
+    monkeypatch.setenv("REPRO_FASTMAX_BWD", "jnp")
+    assert not ops.use_pallas_bwd()
+    g_jnp = ops._fc_bwd(2, 16, 1e-6, True, res, do)
+    for a, b in zip(g_pallas, g_jnp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-8, atol=1e-10)
+
+
+@pytest.mark.parametrize("shape", [(1, 2, 1, 32, 8, 8),
+                                   (2, 4, 2, 100, 16, 16)])
+@pytest.mark.parametrize("p", [1, 2])
+def test_forward_emits_final_state(shape, p):
+    """return_state=True: the forward kernel's own carry == full-sequence
+    moments (the prefill→decode handoff and the backward residual)."""
+    from repro.core.fastmax import compute_moments
+    rng = np.random.default_rng(hash((shape, p, "st")) % 2**31)
+    q, k, v = mk(rng, *shape, jnp.float64)
+    o, state = fastmax_prefill_kernel(q, k, v, p=p, chunk_size=16, interpret=True)
+    ref_o = fastmax_ref(q, k, v, p=p, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref_o),
+                               rtol=1e-9, atol=1e-9)
+    mom = compute_moments(k, v, p=p)
+    for got, want in zip(state, mom):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("p", [1, 2])
+def test_decode_long_horizon_kernel_vs_jnp(p):
+    """Prefill + 256 decode steps: the kernel-carried state stays in
+    lockstep with the jnp moment step (no drift over a long horizon)."""
+    from repro.core.fastmax import Moments
+    from repro.core.decode_state import fastmax_decode_step
+    rng = np.random.default_rng(31 + p)
+    B, Hq, Hkv, N, D, Dv = 1, 2, 1, 16, 4, 4
+    q, k, v = mk(rng, B, Hq, Hkv, N, D, Dv, jnp.float64)
+    _, state_k = fastmax_prefill_kernel(q, k, v, p=p, chunk_size=8, interpret=True)
+    state_j = Moments(*state_k)
+    st_k = tuple(state_k)
+    for i in range(256):
+        q1, k1, v1 = mk(rng, B, Hq, Hkv, 1, D, Dv, jnp.float64)
+        o_k, st_k = fastmax_decode(q1, k1, v1, st_k, p=p, interpret=True)
+        o_j, state_j = fastmax_decode_step(state_j, q1, k1, v1, p=p,
+                                           normalize=False)
+        if i % 64 == 63 or i == 255:
+            np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_j),
+                                       rtol=1e-8, atol=1e-9)
+    for a, b in zip(st_k, state_j):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-8, atol=1e-9)
 
 
 def test_kernel_vs_oracle_decode_after_prefill_consistency():
