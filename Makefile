@@ -1,6 +1,7 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-attention test-kernels bench bench-json
+.PHONY: test test-fast test-attention test-kernels test-shard dryrun-gate \
+	bench bench-json
 
 # full tier-1 suite (everything, incl. multi-minute subprocess compiles)
 test:
@@ -21,6 +22,23 @@ test-attention:
 # just the Pallas kernel validation (fwd/bwd/decode interpret equivalence)
 test-kernels:
 	$(PY) -m pytest -q -m "kernels and not slow"
+
+# multi-device tier: shard_map kernel parity + feature-TP scan grads on 8
+# forced host CPU devices (no TPU required; conftest injects XLA_FLAGS)
+test-shard:
+	REPRO_TEST_DEVICES=8 $(PY) -m pytest -q -m shard tests/test_shard_map.py
+
+# sharding-health gate: the cells the shard-native work must keep clean —
+# 0 involuntary remats on train_4k (feature-TP scan) and decode_32k, and
+# the TP=16 decode routed to the shard_map Pallas kernels (no jnp fallback)
+dryrun-gate:
+	$(PY) -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k \
+		--assert-no-remat --out results/dryrun-gate
+	$(PY) -m repro.launch.dryrun --arch qwen2.5-32b --shape decode_32k \
+		--attn fastmax2-kernel --assert-no-remat --assert-kernel-route \
+		--out results/dryrun-gate
+	$(PY) -m repro.launch.dryrun --arch llama3-405b --shape decode_32k \
+		--attn softmax --assert-no-remat --out results/dryrun-gate
 
 bench:
 	$(PY) -m benchmarks.run --quick

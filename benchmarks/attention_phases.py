@@ -14,13 +14,75 @@ which is exactly what a committed per-repo baseline is for.
 """
 from __future__ import annotations
 
+import json
 import os
+import subprocess
+import sys
 
 import numpy as np
 
 from benchmarks.common import csv_row, time_fn
 
 SPECS = ("softmax", "fastmax2", "fastmax2-kernel")
+
+# TP>1 decode cell: the shard_map-wrapped Pallas decode kernel vs the jnp
+# feature-TP moment step it replaced as the tensor-parallel serving path.
+# Runs in a subprocess so this process keeps its 1-device view: the child
+# forces 8 host devices and decodes under a (data=2, model=4) mesh with kv
+# heads NOT dividing 'model' (the GQA feature-TP regime of the production
+# configs). Interpret-mode kernels — within-machine trend tracking only,
+# like every row in this suite.
+_TP_SUBPROC = r"""
+import os, json, time
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=8").strip()
+import jax, jax.numpy as jnp, numpy as np
+from repro.attention import AttentionSpec, init_state, prefill, step
+from repro.launch.mesh import make_test_mesh
+
+b, hq, hkv, n, d, dv, iters, steps = {shape}
+spec = AttentionSpec(family="fastmax", p=2, impl="kernel", chunk_size=64)
+rng = np.random.default_rng(0)
+mkq = lambda m: (jnp.asarray(rng.normal(size=(b, hq, m, d)), jnp.float32),
+                 jnp.asarray(rng.normal(size=(b, hkv, m, d)), jnp.float32),
+                 jnp.asarray(rng.normal(size=(b, hkv, m, dv)), jnp.float32))
+q, k, v = mkq(n)
+q1, k1, v1 = mkq(1)
+mesh = make_test_mesh((2, 4), ("data", "model"))
+res = {{}}
+with mesh:
+    for key, env in (("decode_us", "1"), ("decode_jnp_us", "0")):
+        os.environ["REPRO_DECODE_KERNEL"] = env
+        st = init_state(spec, batch=b, n_kv_heads=hkv, q_head_dim=d,
+                        v_head_dim=dv, max_len=n + 1)
+        _, st = prefill(q, k, v, spec, state=st)
+        fn = jax.jit(lambda st, q, k, v: step(st, q, k, v, spec))
+        o, _ = fn(st, q1, k1, v1)
+        o.block_until_ready()
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                o, _ = fn(st, q1, k1, v1)
+            o.block_until_ready()
+            ts.append((time.perf_counter() - t0) / steps)
+        res[key] = min(ts) * 1e6
+print(json.dumps(res))
+"""
+
+
+def _bench_tp_decode(*, quick: bool) -> dict:
+    shape = ((2, 4, 2, 128, 16, 16, 3, 8) if quick
+             else (4, 8, 2, 1024, 64, 64, 5, 16))
+    out = subprocess.run(
+        [sys.executable, "-c", _TP_SUBPROC.format(shape=shape)],
+        capture_output=True, text=True, timeout=900,
+        env={**os.environ, "PYTHONPATH": "src"},
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"tp-decode subprocess failed: "
+                           f"{out.stderr[-800:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
 
 
 def _mk(rng, b, hq, hkv, n, d, dv, dtype):
@@ -82,6 +144,13 @@ def collect(quick: bool = True) -> dict:
             os.environ.pop("REPRO_DECODE_KERNEL", None)
         else:
             os.environ["REPRO_DECODE_KERNEL"] = prev
+    # TP>1 decode: shard_map kernel vs the jnp feature-TP step (subprocess
+    # with 8 forced host devices; fail-soft so a broken child doesn't take
+    # the whole suite down)
+    try:
+        suites["fastmax2-kernel-tp4"] = _bench_tp_decode(quick=quick)
+    except Exception as e:  # noqa: BLE001
+        print(f"attn_phases: tp-decode cell skipped ({e})", file=sys.stderr)
     return {
         "meta": {
             "platform": jax.default_backend(),

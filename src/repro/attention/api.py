@@ -56,12 +56,12 @@ def attention(
         spec, causal=causal, dropout=dropout,
         kv_mask=kv_mask is not None, gqa=q.shape[1] != k.shape[1],
         strict=strict)
-    # Moment feature-TP is activated on the DECODE step only
-    # (repro.attention.state.step), where the TP=16 dryrun shows it
-    # partitions cleanly (0 involuntary-remat warnings, ~2x less ICI
-    # traffic). Constraining the full-sequence scan paths the same way
-    # currently triggers remats of the scan-stacked chunks — keep them
-    # unconstrained until the scan carries sharding-aware annotations
-    # (ROADMAP).
+    # Moment feature-TP now applies to the full-sequence paths too: the
+    # chunked scans stack their chunk inputs/outputs and constrain the
+    # carry sharding-aware (rules.shard_stacked + _constrain_moments_j),
+    # which removes the involuntary remats that previously made this
+    # decode-step-only (ROADMAP; regression-gated by the dryrun's
+    # xla_remat count).
+    fs = backend.caps.feature_shard and feature_shard_flag(k.shape[1])
     return backend.fn(q, k, v, spec, causal=causal, kv_mask=kv_mask,
-                      rng=rng, feature_shard=False)
+                      rng=rng, feature_shard=fs)

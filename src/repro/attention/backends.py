@@ -90,11 +90,36 @@ def _chunked_fn(q, k, v, spec: AttentionSpec, *, causal, kv_mask, rng,
 
 def _kernel_fn(q, k, v, spec: AttentionSpec, *, causal, kv_mask, rng,
                feature_shard):
+    from repro.attention.registry import _log_once
     from repro.core.fastmax import normalize_qk
     from repro.kernels import ops as kernel_ops
+    from repro.kernels.sharded import nontrivial_mesh, plan_kernel_sharding
 
-    del kv_mask, rng, feature_shard
+    del kv_mask, rng
     spec = spec.resolved()
+    mesh = nontrivial_mesh()
+    if mesh is not None:
+        plan = plan_kernel_sharding(mesh, batch=q.shape[0], hq=q.shape[1],
+                                    hkv=k.shape[1], dv=v.shape[-1])
+        if plan is not None and plan.mode == "heads":
+            # fwd AND the fused Pallas bwd run shard-local per (batch,
+            # kv-head) — autodiff of the shard_map applies the custom_vjp
+            # per shard
+            from repro.kernels.sharded import fastmax_sharded
+            _log_once(f"attention: fastmax-kernel {plan.describe()}")
+            qh = normalize_qk(q) if spec.normalize else q
+            kh = normalize_qk(k) if spec.normalize else k
+            return fastmax_sharded(qh, kh, v, p=spec.p, causal=causal,
+                                   chunk_size=spec.chunk_size,
+                                   denom_eps=spec.denom_eps, plan=plan)
+        # feature-TP mesh (kv heads don't divide 'model'): the fused
+        # backward contracts over the full Dv per chunk, so the trainable
+        # path runs the sharding-aware chunked scan instead
+        _log_once(
+            "attention: fastmax-kernel under 'model' mesh without "
+            "head-divisible kv heads -> chunked scan (feature-TP)")
+        return _chunked_fn(q, k, v, spec, causal=causal, kv_mask=None,
+                           rng=None, feature_shard=feature_shard)
     qh = normalize_qk(q) if spec.normalize else q
     kh = normalize_qk(k) if spec.normalize else k
     return kernel_ops.fastmax(qh, kh, v, p=spec.p, causal=causal,
@@ -137,10 +162,14 @@ register(Backend(
 # custom_vjp backward assumes no mask (as does the jnp §2.5 backward) — a
 # masked call must reroute to chunked. The inference-only prefill protocol
 # (repro.attention.prefill) uses the kernel's mask support directly.
+# feature_shard=True: under a 'model' mesh the kernels run shard_map-
+# wrapped (heads mode — `repro.kernels.sharded`); a feature-TP mesh routes
+# the trainable path to the sharding-aware chunked scan, honoring the flag.
 register(Backend(
     name="fastmax-kernel",
     family="fastmax",
     caps=Capabilities(decode=True, decode_kernel=True, custom_grad=True,
+                      feature_shard=True,
                       platforms=("tpu",), interpretable=True),
     fn=_kernel_fn,
     fallback="fastmax-chunked",   # kv_mask / dropout reroute through chunked

@@ -61,10 +61,12 @@ class Capabilities:
     gqa: bool = True              # grouped-query attention (Hq != Hkv)
     kv_mask: bool = False         # exact padding-token masking
     feature_shard: bool = False   # backend fn ACCEPTS moment feature-dim TP
-    #                               sharding; currently activated only by the
-    #                               decode step (repro.attention.state.step),
-    #                               not the full-sequence attention() path —
-    #                               see the note in api.attention()
+    #                               sharding; attention() passes it whenever
+    #                               the active mesh tensor-parallelizes over
+    #                               kv heads that don't divide it (the
+    #                               full-sequence scans stack their chunks
+    #                               sharding-aware — docs/sharding.md), and
+    #                               the decode step derives the same flag
     custom_grad: bool = False     # paper §2.5 memory-reduced backward
     platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu")
     interpretable: bool = False

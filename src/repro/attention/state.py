@@ -52,6 +52,12 @@ def use_decode_kernel(spec: AttentionSpec) -> bool:
     On TPU that routes decode to the kernel; elsewhere the jnp moment step
     is the fallback (logged once). REPRO_DECODE_KERNEL=1 forces the kernel
     (interpret mode off-TPU); =0 disables it even on TPU.
+
+    Under a multi-device mesh the kernels run shard_map-wrapped
+    (`repro.kernels.sharded`): heads mode when kv heads divide the 'model'
+    axis, feature (Dv) mode otherwise — the per-call plan is picked in
+    `_kernel_plan`; only dims that fit NEITHER mode fall back to the jnp
+    feature-TP moment step (logged).
     """
     if spec.family == "softmax":
         return False
@@ -67,16 +73,6 @@ def use_decode_kernel(spec: AttentionSpec) -> bool:
         _log_once(f"decode: {backend.name} native-state kernel (forced; "
                   f"interpret off-TPU)")
         return True
-    mesh = _active_model_mesh()
-    if mesh is not None:
-        # the decode kernel is not shard_map-wrapped yet: under tensor
-        # parallelism the jnp moment step is the verified feature-TP path
-        # (remat-clean TP=16 dryrun) — route there until the kernel carries
-        # its own partitioning (ROADMAP)
-        _log_once(
-            f"decode: {backend.name} kernel not yet sharded over 'model' "
-            f"(size {mesh.shape['model']}) -> jnp feature-TP moment step")
-        return False
     if jax.default_backend() == "tpu":
         _log_once(f"decode: {backend.name} native-state kernel")
         return True
@@ -86,15 +82,24 @@ def use_decode_kernel(spec: AttentionSpec) -> bool:
     return False
 
 
-def _active_model_mesh():
-    """The active mesh when it tensor-parallelizes over 'model', else None."""
-    from repro.sharding.rules import active_mesh
+def _kernel_plan(q, k, v):
+    """(mesh, plan) for a kernel launch under the active mesh.
 
-    mesh = active_mesh()
-    if mesh is not None and "model" in mesh.axis_names \
-            and mesh.shape["model"] > 1:
-        return mesh
-    return None
+    mesh None -> single-device: plain kernel call. mesh set, plan None ->
+    the mesh tensor-parallelizes but neither kv heads nor Dv divide the
+    'model' axis: route to the jnp feature-TP moment step (logged by the
+    caller). Otherwise the kernel runs shard_map-wrapped per the plan.
+    """
+    from repro.kernels.sharded import nontrivial_mesh, plan_kernel_sharding
+
+    mesh = nontrivial_mesh()
+    if mesh is None:
+        return None, None
+    plan = plan_kernel_sharding(mesh, batch=q.shape[0], hq=q.shape[1],
+                                hkv=k.shape[1], dv=v.shape[-1])
+    if plan is not None:
+        _log_once(f"decode: fastmax kernel {plan.describe()}")
+    return mesh, plan
 
 
 class KVCache(NamedTuple):
@@ -153,11 +158,14 @@ def prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     n = q.shape[2]
     _check_state(state, spec)
     if spec.family == "softmax":
+        from repro.sharding.rules import constrain_kv_cache
         kv = state.kv
         kc = jax.lax.dynamic_update_slice_in_dim(
             kv.k, k.astype(kv.k.dtype), 0, axis=2)
         vc = jax.lax.dynamic_update_slice_in_dim(
             kv.v, v.astype(kv.v.dtype), 0, axis=2)
+        kc = constrain_kv_cache(kc)
+        vc = constrain_kv_cache(vc)
         o = softmax_attention(q, k, v, causal=True, kv_mask=kv_mask)
         mc = kv.mask
         if kv_mask is not None:
@@ -173,17 +181,29 @@ def prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         # one kernel launch yields outputs AND the final carry — the
         # prefill→decode handoff without recomputing moments
         from repro.kernels import ops as kernel_ops
-        o, state = kernel_ops.fastmax_prefill_kernel(
-            qh, kh, v, p=spec.p, chunk_size=spec_r.chunk_size,
-            denom_eps=spec.denom_eps, kv_mask=kv_mask)
-        return o.astype(q.dtype), AttnState(kv=None,
-                                            moments=Moments(*state))
-    # NOTE: no feature_shard here — constraining the prefill scan's carry
-    # causes involuntary remats of the stacked chunks (see attention());
-    # feature-TP is applied on the per-token decode step below.
+        mesh, plan = _kernel_plan(q, k, v)
+        if plan is not None:
+            from repro.kernels.sharded import fastmax_prefill_sharded
+            o, state = fastmax_prefill_sharded(
+                qh, kh, v, p=spec.p, chunk_size=spec_r.chunk_size,
+                denom_eps=spec.denom_eps, kv_mask=kv_mask, plan=plan)
+            return o.astype(q.dtype), AttnState(kv=None,
+                                                moments=Moments(*state))
+        if mesh is None:
+            o, state = kernel_ops.fastmax_prefill_kernel(
+                qh, kh, v, p=spec.p, chunk_size=spec_r.chunk_size,
+                denom_eps=spec.denom_eps, kv_mask=kv_mask)
+            return o.astype(q.dtype), AttnState(kv=None,
+                                                moments=Moments(*state))
+        _log_once(
+            "decode: fastmax kernel unpartitionable over 'model' "
+            "(kv heads and Dv both indivisible) -> jnp feature-TP scan")
+    # the jnp chunked scan is sharding-aware: under feature-TP the stacked
+    # chunks are pinned and the carry constrained (see _causal_scan)
+    fs = feature_shard_flag(k.shape[1])
     o, final = _causal_scan(
         qh, kh, v, p=spec.p, chunk_size=spec_r.chunk_size, kv_mask=kv_mask,
-        denom_eps=spec.denom_eps)
+        denom_eps=spec.denom_eps, feature_shard=fs)
     return o.astype(q.dtype), AttnState(kv=None, moments=final)
 
 
@@ -198,14 +218,31 @@ def step(state: AttnState, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     """
     _check_state(state, spec)
     if spec.family == "softmax":
+        from repro.sharding.rules import constrain_kv_cache, model_axis_size
         kv = state.kv
         kc = jax.lax.dynamic_update_slice_in_dim(
             kv.k, k.astype(kv.k.dtype), kv.length, axis=2)
         vc = jax.lax.dynamic_update_slice_in_dim(
             kv.v, v.astype(kv.v.dtype), kv.length, axis=2)
+        # pin the freshly-updated cache to its committed inter-step layout
+        # (kv_cache_spec: heads over 'model' when divisible, else the
+        # sequence dim) — without this the partitioner resolves the
+        # head-sharded-consumer vs head_dim-sharded-cache conflict by
+        # fully rematerializing cache-sized tensors every step (the 3
+        # SOFTMAX 32k-decode warnings, ROADMAP)
+        kc = constrain_kv_cache(kc)
+        vc = constrain_kv_cache(vc)
         nmax = kc.shape[2]
         mask = (jnp.arange(nmax)[None, None, :] <= kv.length).astype(
             jnp.float32) * kv.mask
+        mask = constrain_kv_cache(mask)
+        tp = model_axis_size()
+        if tp > 1 and k.shape[1] % tp != 0:
+            # sequence-sharded cache: queries must be model-replicated so
+            # the softmax over the sharded timeline partitions as partial
+            # max/sum reductions instead of resharding the cache
+            from repro.sharding.rules import replicate
+            q = replicate(q, batch_dim=0)
         o = softmax_attention(q, kc, vc, causal=False, kv_mask=mask)
         return o, AttnState(kv=KVCache(kc, vc, kv.length + 1, kv.mask),
                             moments=None)
@@ -215,10 +252,22 @@ def step(state: AttnState, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     hkv, hq = k.shape[1], q.shape[1]
     if use_decode_kernel(spec):
         from repro.kernels import ops as kernel_ops
-        o, new_state = kernel_ops.fastmax_decode(
-            qh, kh, v, state.moments, p=spec.p, denom_eps=spec.denom_eps)
-        return (o.astype(q.dtype),
-                AttnState(kv=None, moments=Moments(*new_state)))
+        mesh, plan = _kernel_plan(q, k, v)
+        if plan is not None:
+            from repro.kernels.sharded import fastmax_decode_sharded
+            o, new_state = fastmax_decode_sharded(
+                qh, kh, v, tuple(state.moments), p=spec.p,
+                denom_eps=spec.denom_eps, plan=plan)
+            return (o.astype(q.dtype),
+                    AttnState(kv=None, moments=Moments(*new_state)))
+        if mesh is None:
+            o, new_state = kernel_ops.fastmax_decode(
+                qh, kh, v, state.moments, p=spec.p, denom_eps=spec.denom_eps)
+            return (o.astype(q.dtype),
+                    AttnState(kv=None, moments=Moments(*new_state)))
+        _log_once(
+            "decode: fastmax kernel unpartitionable over 'model' "
+            "(kv heads and Dv both indivisible) -> jnp feature-TP step")
     # jnp moment step. Under tensor parallelism the moments are sharded on
     # their feature (Dv / trailing-D) dims while q arrives head-sharded —
     # constrain the delta, the running state, and the combine to consistent

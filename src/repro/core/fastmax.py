@@ -195,12 +195,13 @@ def combine_with_queries(q: jnp.ndarray, mom: Moments, *, p: int,
                                 preferred_element_type=acc))
             num2 = c if num2 is None else num2 + c
         num = feat(num + 0.5 * num2)
-        # two explicit steps so the q·g2 intermediate keeps the moments'
-        # feature sharding ('model' on l) and the scalar contraction over l
-        # becomes a partial-sum + psum instead of a g2 reshard
+        # g2 is pinned model-REPLICATED (like all g-moments), so the q·g2
+        # intermediate stays replicated too and the scalar contraction over
+        # l is collective-free — sharding t here would force a partial-sum
+        # + all-reduce per chunk for no moment-traffic saving
         t = jnp.einsum("...nm,...ml->...nl", qf, mom.g2,
                        preferred_element_type=acc)
-        t = feat(t)
+        t = replicate(t)
         den = den + 0.5 * replicate(jnp.einsum(
             "...nl,...nl->...n", t, qf, preferred_element_type=acc))
         den = replicate(den)
@@ -238,12 +239,21 @@ def compute_moments_chunked(
     p: int,
     kv_mask: Optional[jnp.ndarray] = None,
     chunk_size: int = 512,
+    feature_shard: bool = False,
 ) -> Moments:
     """Full-sequence moments accumulated over N-chunks — peak memory
-    O(chunk * bm * D) instead of O(N * bm * D)."""
+    O(chunk * bm * D) instead of O(N * bm * D).
+
+    `feature_shard=True`: the scan runs sharding-aware — stacked chunks
+    pinned to one total layout (`rules.shard_stacked`; v chunks Dv-sharded
+    on 'model') and the carry feature-TP constrained, so the accumulated
+    moments come out in the `_constrain_moments_j` layout without the
+    partitioner rematerializing the stacked chunks.
+    """
     b, hkv, m, d = k.shape
     if m <= chunk_size:
-        return compute_moments(k, v, p=p, kv_mask=kv_mask)
+        mom = compute_moments(k, v, p=p, kv_mask=kv_mask)
+        return _constrain_moments_j(mom) if feature_shard else mom
     nc = -(-m // chunk_size)
     pad = nc * chunk_size - m
     kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
@@ -256,27 +266,43 @@ def compute_moments_chunked(
     kc = jnp.moveaxis(kp.reshape(b, hkv, nc, chunk_size, d), 2, 0)
     vc = jnp.moveaxis(vp.reshape(b, hkv, nc, chunk_size, -1), 2, 0)
     mc = jnp.moveaxis(maskp.reshape(b, hkv, nc, chunk_size), 2, 0)
+    if feature_shard:
+        from repro.sharding.rules import shard_stacked
+        kc = shard_stacked(kc)
+        vc = shard_stacked(vc, model_dim=-1)
+        mc = shard_stacked(mc)
 
     def body(acc, xs):
         kc_i, vc_i, mc_i = xs
-        return acc + compute_moments(kc_i, vc_i, p=p, kv_mask=mc_i), None
+        new = acc + compute_moments(kc_i, vc_i, p=p, kv_mask=mc_i)
+        if feature_shard:
+            new = _constrain_moments_j(new)
+        return new, None
 
     zero = jax.tree.map(
         jnp.zeros_like, compute_moments(kc[0], vc[0], p=p, kv_mask=mc[0])
     )
+    if feature_shard:
+        zero = _constrain_moments_j(zero)
     mom, _ = jax.lax.scan(body, zero, (kc, vc, mc))
     return mom
 
 
 def _constrain_moments_j(mom: Moments) -> Moments:
-    """Feature-TP (noncausal/global moments): shard the value (Dv) dim of
-    the moment tensors over 'model' — the phi2 combine then splits TP-ways
-    with no extra collectives (beyond the row-parallel wo psum). Beyond-
-    paper: Megatron row-parallelism on the factorized-attention feature
-    dim. The batch dim keeps its DP axes: a with_sharding_constraint is
-    total, so leaving dim 0 out would force a batch all-gather of the
-    moment state every step."""
-    from repro.sharding.rules import maybe_constraint
+    """Feature-TP: shard the value (Dv) dim of the m-moments over 'model' —
+    the phi2 combine then splits TP-ways with no extra collectives (beyond
+    the row-parallel wo psum). Beyond-paper: Megatron row-parallelism on
+    the factorized-attention feature dim. The batch dim keeps its DP axes:
+    a with_sharding_constraint is total, so leaving dim 0 out would force a
+    batch all-gather of the moment state every step.
+
+    The scalar g-moments are pinned model-REPLICATED (same layout the
+    shard_map kernels and `decode_state_shardings` commit): they are
+    Dv-times smaller than their m partners, and left unconstrained the
+    partitioner shards g2's D dims — which back-propagates a D-sharding
+    onto the scan-stacked q chunks and rematerializes them every chunk
+    (the last 2 train_4k involuntary-remat warnings)."""
+    from repro.sharding.rules import maybe_constraint, replicate
 
     def j_shard(x):
         if x.ndim < 3:
@@ -284,17 +310,18 @@ def _constrain_moments_j(mom: Moments) -> Moments:
         return maybe_constraint(
             x, ("pod", "data"), *((None,) * (x.ndim - 2) + ("model",)))
 
+    rep = lambda x: replicate(x, batch_dim=0)  # noqa: E731 — keep DP
     return Moments(j_shard(mom.m0), j_shard(mom.m1), j_shard(mom.m2),
-                   mom.g0, mom.g1, mom.g2)
+                   rep(mom.g0), rep(mom.g1), rep(mom.g2))
 
 
-def _combine_grouped(qg, mom: Moments, *, p: int):
+def _combine_grouped(qg, mom: Moments, *, p: int, feature_shard=False):
     """combine_with_queries with the G axis FOLDED into the token axis —
     never builds a broadcast [.., Hkv, G, D, D, Dv] view of the moments
     (XLA reshapes of broadcasts force full rematerialization)."""
     b, hkv, g, n, d = qg.shape
     qf = qg.reshape(b, hkv, g * n, d)
-    num, den = combine_with_queries(qf, mom, p=p)
+    num, den = combine_with_queries(qf, mom, p=p, feature_shard=feature_shard)
     return (num.reshape(b, hkv, g, n, -1), den.reshape(b, hkv, g, n))
 
 
@@ -313,11 +340,10 @@ def fastmax_noncausal(
     b, hkv, m, d = k.shape
     out_dtype = q.dtype
     mom = compute_moments_chunked(k, v, p=p, kv_mask=kv_mask,
-                                  chunk_size=chunk_size)
-    if feature_shard:
-        mom = _constrain_moments_j(mom)
+                                  chunk_size=chunk_size,
+                                  feature_shard=feature_shard)
     qg = _group_queries(q, hkv)
-    num, den = _combine_grouped(qg, mom, p=p)
+    num, den = _combine_grouped(qg, mom, p=p, feature_shard=feature_shard)
     o = num / (den + denom_eps)[..., None]
     return _ungroup(o).astype(out_dtype)
 
@@ -355,6 +381,16 @@ def _causal_scan(q, k, v, *, p, chunk_size, kv_mask, denom_eps,
     Carry = moments of all *previous* chunks; each chunk adds an exact
     intra-chunk term computed through the f(QK^T) block (same numbers as the
     factorized form, cheaper for the diagonal).
+
+    `feature_shard=True` makes the scan sharding-aware end to end: the
+    stacked chunk inputs are pinned to one total layout (q/k/w model-
+    replicated with DP batch, v chunks Dv-sharded — `rules.shard_stacked`),
+    the carry is feature-TP constrained every step, and the combine runs
+    `combine_with_queries(feature_shard=True)` so each output chunk comes
+    out Dv-sharded. Without the stacked-input pins, constraining only the
+    carry makes the partitioner flip-flop the stacked tensors' layout
+    between scan iterations — the measured 0→12 involuntary-remat
+    regression on train_4k (ROADMAP) this closes.
     """
     b, hq, n, d = q.shape
     hkv = k.shape[1]
@@ -363,6 +399,15 @@ def _causal_scan(q, k, v, *, p, chunk_size, kv_mask, denom_eps,
     nc = -(-n // cs)
     pad = nc * cs - n
 
+    if feature_shard:
+        # pin the UNstacked inputs too: the pad/reshape/moveaxis chain (and
+        # any residual XLA stashes across an outer layer-scan's remat
+        # boundary) then derives ONE layout instead of a loop-local choice
+        # that conflicts with the stacked pins below
+        from repro.sharding.rules import shard_stacked
+        q = shard_stacked(q, batch_dim=0)
+        k = shard_stacked(k, batch_dim=0)
+        v = shard_stacked(v, batch_dim=0, model_dim=-1)
     if kv_mask is None:
         w = jnp.ones((b, hkv, n), dtype=jnp.float32)
     else:
@@ -379,16 +424,31 @@ def _causal_scan(q, k, v, *, p, chunk_size, kv_mask, denom_eps,
     ks = jnp.moveaxis(kp.reshape(b, hkv, nc, cs, d), 2, 0)
     vs = jnp.moveaxis(vp.reshape(b, hkv, nc, cs, dv), 2, 0)
     ws = jnp.moveaxis(wp.reshape(b, hkv, nc, cs), 2, 0)
+    if feature_shard:
+        from repro.sharding.rules import shard_stacked
+        qs = shard_stacked(qs)
+        ks = shard_stacked(ks)
+        vs = shard_stacked(vs, model_dim=-1)
+        ws = shard_stacked(ws)
 
     zero = jax.tree.map(
         jnp.zeros_like, compute_moments(ks[0], vs[0], p=p, kv_mask=ws[0])
     )
+    if feature_shard:
+        zero = _constrain_moments_j(zero)
 
     def body(carry: Moments, xs):
         qc, kc, vc, wc = xs
-        num_i, den_i = _combine_grouped(qc, carry, p=p)
+        num_i, den_i = _combine_grouped(qc, carry, p=p,
+                                        feature_shard=feature_shard)
         num_a, den_a = _intra_chunk(qc, kc, vc, p=p, wc=wc)
         o = (num_i + num_a) / (den_i + den_a + denom_eps)[..., None]
+        if feature_shard:
+            from repro.sharding.rules import shard_stacked
+            # per-chunk output pinned Dv-on-'model' (batch keeps DP): the
+            # stacked scan output then has ONE layout instead of whatever
+            # each iteration's combine left behind
+            o = shard_stacked(o, batch_dim=0, model_dim=-1)
         new_carry = carry + compute_moments(kc, vc, p=p, kv_mask=wc)
         if feature_shard:
             new_carry = _constrain_moments_j(new_carry)
@@ -433,6 +493,12 @@ def _causal_scan_cg_bwd(p, chunk_size, denom_eps, feature_shard, res, do):
     nc = -(-n // cs)
     pad = nc * cs - n
 
+    if feature_shard:
+        from repro.sharding.rules import shard_stacked
+        q = shard_stacked(q, batch_dim=0)
+        k = shard_stacked(k, batch_dim=0)
+        v = shard_stacked(v, batch_dim=0, model_dim=-1)
+        do = shard_stacked(do, batch_dim=0, model_dim=-1)
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
     kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
     vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
@@ -449,9 +515,23 @@ def _causal_scan_cg_bwd(p, chunk_size, denom_eps, feature_shard, res, do):
     ws = jnp.moveaxis(w.reshape(b, hkv, nc, cs), 2, 0)
     dog = _group_queries(dop, hkv)
     dos = jnp.moveaxis(dog.reshape(b, hkv, g, nc, cs, dv), 3, 0)
+    # the chunk forward emits fp32-accumulated outputs; a low-precision
+    # cotangent (kernel path: do arrives in the input dtype) must be
+    # promoted to match or jax.vjp rejects it
+    dos = dos.astype(_acc_dtype(dos))
+    if feature_shard:
+        from repro.sharding.rules import shard_stacked
+        # mirror the forward scan's stacked-layout pins (the output
+        # cotangent chunks carry the forward outputs' Dv sharding)
+        qs = shard_stacked(qs)
+        ks = shard_stacked(ks)
+        vs = shard_stacked(vs, model_dim=-1)
+        ws = shard_stacked(ws)
+        dos = shard_stacked(dos, model_dim=-1)
 
     def chunk_fwd(carry: Moments, qc, kc, vc, wc):
-        num_i, den_i = _combine_grouped(qc, carry, p=p)
+        num_i, den_i = _combine_grouped(qc, carry, p=p,
+                                        feature_shard=feature_shard)
         num_a, den_a = _intra_chunk(qc, kc, vc, p=p, wc=wc)
         return (num_i + num_a) / (den_i + den_a + denom_eps)[..., None]
 
@@ -460,6 +540,8 @@ def _causal_scan_cg_bwd(p, chunk_size, denom_eps, feature_shard, res, do):
         qc, kc, vc, wc, doc = xs
         delta = compute_moments(kc, vc, p=p, kv_mask=wc)
         carry_before = carry_after - delta
+        if feature_shard:
+            carry_before = _constrain_moments_j(carry_before)
 
         def f(carry, qc_, kc_, vc_):
             o = chunk_fwd(carry, qc_, kc_, vc_, wc)
@@ -470,12 +552,30 @@ def _causal_scan_cg_bwd(p, chunk_size, denom_eps, feature_shard, res, do):
 
         _, vjp_fn = jax.vjp(f, carry_before, qc, kc, vc)
         gcarry_before, gq, gk, gv = vjp_fn((doc, gcarry))
-        return (carry_before, Moments(*gcarry_before)), (gq, gk, gv)
+        gcarry_before = Moments(*gcarry_before)
+        if feature_shard:
+            # the carry-cotangent is moment-shaped: same feature-TP layout;
+            # the chunk cotangents mirror their primals' pins so the scan's
+            # stacked output buffers get ONE layout too
+            from repro.sharding.rules import shard_stacked
+            gcarry_before = _constrain_moments_j(gcarry_before)
+            gq = shard_stacked(gq, batch_dim=0)
+            gk = shard_stacked(gk, batch_dim=0)
+            gv = shard_stacked(gv, batch_dim=0, model_dim=-1)
+        return (carry_before, gcarry_before), (gq, gk, gv)
 
     gzero = jax.tree.map(jnp.zeros_like, final)
+    if feature_shard:
+        gzero = _constrain_moments_j(gzero)
+        final = _constrain_moments_j(final)
     (_, _), (gqs, gks, gvs) = jax.lax.scan(
         rev_body, (final, gzero), (qs, ks, vs, ws, dos), reverse=True
     )
+    if feature_shard:
+        from repro.sharding.rules import shard_stacked
+        gqs = shard_stacked(gqs)
+        gks = shard_stacked(gks)
+        gvs = shard_stacked(gvs, model_dim=-1)
     gq = _ungroup(jnp.moveaxis(gqs, 0, 3).reshape(b, hkv, g, nc * cs, d))
     gk = jnp.moveaxis(gks, 0, 2).reshape(b, hkv, nc * cs, d)
     gv = jnp.moveaxis(gvs, 0, 2).reshape(b, hkv, nc * cs, dv)

@@ -1,0 +1,221 @@
+"""shard_map wrappers: the fastmax Pallas kernels on a multi-device mesh.
+
+A `pallas_call` is opaque to the SPMD partitioner: under a mesh, GSPMD
+treats it as a replicated computation and all-gathers every operand. These
+wrappers make the kernels shard-native instead — each device runs the SAME
+kernel body on its shard, with the partitioning chosen once per call site:
+
+  heads mode    Hkv % tp == 0: batch over the DP axes ("pod","data"), kv
+                heads (and their aligned query groups) over "model". Every
+                kernel — forward, fused backward, decode — is embarrassingly
+                parallel per (batch, kv-head), so the wrapped call has ZERO
+                collectives; the only cross-device traffic left is the
+                row-parallel wo psum the caller already does.
+  feature mode  Hkv % tp != 0 (GQA/MQA at TP degree > Hkv) but Dv % tp == 0:
+                moments and v sharded on the value-feature dim over "model"
+                (the feature-TP layout of `_constrain_moments_j`), q/k and
+                the scalar g-moments replicated across "model". Each device
+                folds the token into ITS Dv-slice of (m0, m1, m2) and
+                redundantly maintains the tiny g-moments, so the numerator
+                splits tp-ways and the denominator is exact locally — again
+                zero collectives inside the wrapper. Supported for the
+                inference kernels (prefill forward + decode); the fused
+                backward contracts over the full Dv per chunk, so training
+                under feature-TP stays on the sharding-aware jnp scan
+                (repro.core.fastmax, see `attention/backends.py`).
+
+The group alignment heads mode relies on: q heads are grouped contiguously
+([B, Hkv, G, ...] reshape), so a "model" shard of Hq = G·Hkv heads is
+exactly the query groups of its Hkv-shard — no regrouping traffic.
+
+`plan_kernel_sharding` returns None when neither mode divides (the caller
+falls back to the jnp feature-TP moment step, logged), and
+`nontrivial_mesh()` distinguishes "no mesh at all" (plain single-device
+kernel call) from "mesh but unpartitionable".
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ShardPlan", "nontrivial_mesh", "plan_kernel_sharding",
+           "fastmax_sharded", "fastmax_prefill_sharded",
+           "fastmax_decode_sharded"]
+
+
+class ShardPlan(NamedTuple):
+    """How one fastmax kernel call partitions over the active mesh."""
+
+    mesh: object            # jax.sharding.Mesh
+    batch: object           # P entry for the batch dim: None | axis | tuple
+    mode: str               # "heads" | "feature"
+    tp: int                 # size of the "model" axis (1 = no TP)
+
+    @property
+    def head(self):
+        return "model" if (self.mode == "heads" and self.tp > 1) else None
+
+    @property
+    def feat(self):
+        return "model" if self.mode == "feature" else None
+
+    def describe(self) -> str:
+        mesh_s = "x".join(f"{a}={self.mesh.shape[a]}"
+                          for a in self.mesh.axis_names)
+        return f"shard_map[{self.mode}] over ({mesh_s})"
+
+
+def nontrivial_mesh():
+    """The active mesh when any axis has size > 1, else None."""
+    from repro.sharding.rules import active_mesh
+
+    mesh = active_mesh()
+    if mesh is None:
+        return None
+    if all(mesh.shape[a] == 1 for a in mesh.axis_names):
+        return None
+    return mesh
+
+
+def plan_kernel_sharding(mesh, *, batch: int, hq: int, hkv: int,
+                         dv: int) -> Optional[ShardPlan]:
+    """Pick the partitioning for a fastmax kernel call, or None.
+
+    None means the mesh tensor-parallelizes over "model" but neither kv
+    heads nor the value-feature dim divide it — the caller should use the
+    jnp moment path, whose with_sharding_constraint layout degrades
+    gracefully per dim. Any other mesh gets a plan, possibly degenerate
+    (no 'model' axis, batch indivisible -> an all-replicated wrap), so the
+    kernels stay the path whenever they CAN run.
+    """
+    if mesh is None:
+        return None
+    from repro.sharding.rules import _batch_entry
+
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    b_entry, _ = _batch_entry(mesh, batch)
+    if tp > 1:
+        if hkv % tp == 0 and hq % tp == 0:
+            mode = "heads"
+        elif dv % tp == 0:
+            mode = "feature"
+        else:
+            return None
+    else:
+        mode = "heads"   # degenerate: DP-only wrap, heads unsharded
+    return ShardPlan(mesh=mesh, batch=b_entry, mode=mode, tp=tp)
+
+
+def _moment_specs(plan: ShardPlan):
+    """In/out PartitionSpecs of a Moments-layout tuple [B,Hkv,...]."""
+    ba, h, f = plan.batch, plan.head, plan.feat
+    return (
+        P(ba, h, f),                    # m0 [B,Hkv,Dv]
+        P(ba, h, None, f),              # m1 [B,Hkv,D,Dv]
+        P(ba, h, None, None, f),        # m2 [B,Hkv,D,D,Dv]
+        P(ba, h),                       # g0 [B,Hkv]
+        P(ba, h, None),                 # g1 [B,Hkv,D]
+        P(ba, h, None, None),           # g2 [B,Hkv,D,D]
+    )
+
+
+def fastmax_sharded(q, k, v, *, p: int, causal: bool, chunk_size: int,
+                    denom_eps: float, plan: ShardPlan):
+    """shard_map-wrapped TRAINABLE kernel attention (heads mode only).
+
+    Differentiable: autodiff of the shard_map applies the per-shard
+    custom_vjp, so the fused Pallas backward runs shard-local too.
+    """
+    if plan.mode != "heads":
+        raise ValueError(
+            "trainable kernel shard_map supports heads mode only; "
+            f"got {plan.mode!r} (route feature-TP training to the chunked "
+            "scan)")
+    from repro.kernels import ops as kernel_ops
+
+    ba, h = plan.batch, plan.head
+    qkv_spec = P(ba, h, None, None)
+
+    def body(q, k, v):
+        return kernel_ops.fastmax(q, k, v, p=p, causal=causal,
+                                  chunk_size=chunk_size,
+                                  denom_eps=denom_eps)
+
+    return shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(qkv_spec, qkv_spec, qkv_spec),
+        out_specs=P(ba, h, None, None),
+        check_rep=False,
+    )(q, k, v)
+
+
+def fastmax_prefill_sharded(q, k, v, *, p: int, chunk_size: int,
+                            denom_eps: float, kv_mask=None,
+                            plan: ShardPlan):
+    """shard_map-wrapped causal prefill kernel: (o, final moment tuple).
+
+    heads mode: everything head-local. feature mode: v and the m-moments
+    live on Dv-slices; q/k/g-moments are replicated over "model" (each
+    device maintains the identical tiny g state), so the launch is
+    collective-free and the outputs come back Dv-sharded — exactly the
+    layout `decode_state_shardings` commits between steps.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kernel_ops
+
+    ba, h, f = plan.batch, plan.head, plan.feat
+    in_specs = [P(ba, h, None, None),    # q
+                P(ba, h, None, None),    # k
+                P(ba, h, None, f)]       # v
+    args = [q, k, v]
+    if kv_mask is not None:
+        if h is not None and kv_mask.shape[1] == 1:
+            kv_mask = jnp.broadcast_to(
+                kv_mask, (kv_mask.shape[0], k.shape[1], kv_mask.shape[2]))
+        in_specs.append(P(ba, h, None))
+        args.append(kv_mask)
+
+    def body(q, k, v, *rest):
+        mask = rest[0] if rest else None
+        return kernel_ops.fastmax_prefill_kernel(
+            q, k, v, p=p, chunk_size=chunk_size, denom_eps=denom_eps,
+            kv_mask=mask)
+
+    return shard_map(
+        body, mesh=plan.mesh,
+        in_specs=tuple(in_specs),
+        out_specs=(P(ba, h, None, f), _moment_specs(plan)),
+        check_rep=False,
+    )(*args)
+
+
+def fastmax_decode_sharded(q, k, v, state, *, p: int, denom_eps: float,
+                           plan: ShardPlan):
+    """shard_map-wrapped fused decode step: (o, new moment tuple).
+
+    The serving hot loop at TP > 1: per step each device streams only ITS
+    moment shard (1/tp of m2 in feature mode; its heads in heads mode) —
+    the HBM traffic the fused kernel exists to minimize now also splits
+    tp-ways, with no collectives inside the step.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    ba, h, f = plan.batch, plan.head, plan.feat
+    mspecs = _moment_specs(plan)
+
+    def body(q, k, v, *state):
+        return kernel_ops.fastmax_decode(q, k, v, tuple(state), p=p,
+                                         denom_eps=denom_eps)
+
+    return shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(P(ba, h, None, None),   # q
+                  P(ba, h, None, None),   # k
+                  P(ba, h, None, f),      # v
+                  *mspecs),
+        out_specs=(P(ba, h, None, f), mspecs),
+        check_rep=False,
+    )(q, k, v, *tuple(state))

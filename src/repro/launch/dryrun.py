@@ -83,6 +83,24 @@ def _capture_xla_warnings(out: dict):
             }
 
 
+@contextlib.contextmanager
+def _kernel_cell_env(cfg):
+    """kernel-impl cells must exercise the kernel protocol, not the
+    platform fallback: REPRO_DECODE_KERNEL=1 forces the (shard_map-wrapped
+    under the mesh) Pallas decode path, in interpret mode on this CPU host
+    — the compiled HLO still proves the partitioning. An explicit
+    REPRO_DECODE_KERNEL in the environment wins."""
+    prev = os.environ.get("REPRO_DECODE_KERNEL")
+    if prev is None and cfg.attn.family == "fastmax" \
+            and cfg.attn.impl == "kernel":
+        os.environ["REPRO_DECODE_KERNEL"] = "1"
+    try:
+        yield
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_DECODE_KERNEL", None)
+
+
 def _tree_size_bytes(tree) -> int:
     return sum(int(jnp.prod(jnp.asarray(x.shape)) * x.dtype.itemsize)
                if hasattr(x, "shape") else 0
@@ -125,6 +143,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                 "long_500k needs sub-quadratic attention; softmax baseline "
                 "is pure full attention (DESIGN.md §Arch-applicability)"}
 
+    # record this cell's attention routing decisions (the _log_once lines:
+    # backend reroutes, kernel shard_map plans, jnp fallbacks) so the
+    # result JSON is machine-checkable (--assert-kernel-route)
+    from repro.attention.registry import _LOGGED
+    _LOGGED.clear()
+
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
     key = jax.random.PRNGKey(0)
@@ -133,7 +157,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                    for x in jax.tree.leaves(params_shapes))
 
     xla_diag: dict = {}
-    with _capture_xla_warnings(xla_diag), mesh:
+    with _capture_xla_warnings(xla_diag), _kernel_cell_env(cfg), mesh:
         param_sh = param_shardings(axes, params_shapes, mesh)
 
         if shape.kind == "train":
@@ -253,6 +277,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     out = {
         "arch": arch, "shape": shape_name, "kind": shape.kind,
         "xla_remat": xla_diag.get("xla_remat", {"count": 0, "lines": []}),
+        "attn_routing": sorted(_LOGGED),
         "mesh": "2x16x16" if multi_pod else "16x16",
         "n_chips": int(n_chips),
         "attn_backend": cfg.attn.legacy_name,   # result-JSON back-compat key
@@ -302,6 +327,11 @@ def main():
                          "'Involuntary full rematerialization' (sharding-"
                          "annotation health gate; see ROADMAP serve-path "
                          "item)")
+    ap.add_argument("--assert-kernel-route", action="store_true",
+                    help="fail a cell if the decode protocol fell back to "
+                         "the jnp moment step (a '-> jnp' routing line): "
+                         "proves the shard_map-wrapped Pallas kernels are "
+                         "the decode path at this mesh/shape")
     args = ap.parse_args()
 
     archs = all_arch_ids() if (args.all or args.arch is None) else [args.arch]
@@ -321,12 +351,33 @@ def main():
                     res = run_cell(arch, shape, multi_pod=multi,
                                    attn=args.attn)
                     status = "SKIP" if "skipped" in res else "OK"
+                    gate_errs = []
                     n_remat = res.get("xla_remat", {}).get("count", 0)
                     if args.assert_no_remat and n_remat:
+                        gate_errs.append(
+                            f"{n_remat} involuntary full "
+                            f"rematerialization warning(s)")
+                    routing = res.get("attn_routing", [])
+                    jnp_falls = [ln for ln in routing
+                                 if "decode:" in ln and "-> jnp" in ln]
+                    routed = any("kernel shard_map[" in ln
+                                 for ln in routing)
+                    if args.assert_kernel_route and status == "OK":
+                        # require the POSITIVE shard_map routing line too —
+                        # an empty/disabled routing record must not pass
+                        # the gate vacuously
+                        if jnp_falls:
+                            gate_errs.append("decode fell back to the jnp "
+                                             "moment step: " + jnp_falls[0])
+                        elif not routed:
+                            gate_errs.append(
+                                "no shard_map kernel routing line recorded "
+                                "(REPRO_DECODE_KERNEL disabled, or a "
+                                "non-kernel cell?)")
+                    if gate_errs:
                         status = "FAIL"
                         failures += 1
-                        res["error"] = (f"{n_remat} involuntary full "
-                                        f"rematerialization warning(s)")
+                        res["error"] = "; ".join(gate_errs)
                 except Exception as e:  # noqa: BLE001 — report, keep going
                     res = {"arch": arch, "shape": shape,
                            "mesh": "multi" if multi else "single",

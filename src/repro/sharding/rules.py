@@ -25,7 +25,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["DEFAULT_RULES", "spec_for", "param_shardings", "batch_spec",
            "decode_state_shardings", "maybe_constraint", "replicate",
-           "active_mesh"]
+           "active_mesh", "shard_stacked", "kv_cache_spec",
+           "constrain_kv_cache", "model_axis_size"]
 
 
 def active_mesh():
@@ -65,16 +66,45 @@ def replicate(x, *, batch_dim=None):
         return x
     entries = [None] * x.ndim
     if batch_dim is not None:
-        chosen = []
-        prod = 1
-        for a in ("pod", "data"):
-            if a in mesh.axis_names and x.shape[batch_dim] > 1 \
-                    and x.shape[batch_dim] % (prod * mesh.shape[a]) == 0:
-                chosen.append(a)
-                prod *= mesh.shape[a]
-        if chosen:
-            entries[batch_dim] = (chosen[0] if len(chosen) == 1
-                                  else tuple(chosen))
+        entries[batch_dim], _ = _batch_entry(mesh, x.shape[batch_dim])
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+
+def model_axis_size(mesh=None) -> int:
+    """Size of the 'model' (TP) axis of the given/active mesh; 1 if none."""
+    mesh = mesh if mesh is not None else active_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return 1
+    return mesh.shape["model"]
+
+
+def shard_stacked(x, *, batch_dim=1, model_dim=None):
+    """Pin a scan-stacked chunk tensor [nc, B, ...] to one total layout.
+
+    The chunked-scan paths stack their per-chunk inputs/outputs along a
+    leading axis and `lax.scan` over it. Once the scan CARRY is feature-TP
+    constrained (`_constrain_moments_j`), the partitioner back-propagates
+    'model' shardings into the stacked chunks and flip-flops against the
+    batch layout they arrived with — the measured 0→12 involuntary-remat
+    regression on train_4k (ROADMAP). Pinning each stacked tensor totally —
+    DP axes on `batch_dim`, 'model' on `model_dim` (the value-feature dim of
+    v/output chunks; None = model-replicated), everything else replicated —
+    gives the scan one consistent layout at its boundary, so enabling
+    feature-TP on the scan no longer induces remats.
+
+    No-op without an active mesh; axes that don't divide degrade to
+    replication like every rule here.
+    """
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    entries = [None] * x.ndim
+    entries[batch_dim], _ = _batch_entry(mesh, x.shape[batch_dim])
+    if model_dim is not None:
+        model_dim = model_dim % x.ndim
+        tp = model_axis_size(mesh)
+        if tp > 1 and x.shape[model_dim] % tp == 0:
+            entries[model_dim] = "model"
     return jax.lax.with_sharding_constraint(x, P(*entries))
 
 
@@ -194,36 +224,129 @@ def _dim_spec(size: int, mesh: Mesh, prefer: list, used: set):
     return chosen[0] if len(chosen) == 1 else tuple(chosen)
 
 
+def _batch_entry(mesh: Mesh, size: int):
+    """Greedy DP entry for a batch-like dim, plus the axes it consumed."""
+    chosen, prod = [], 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names and size > 1 \
+                and size % (prod * mesh.shape[a]) == 0:
+            chosen.append(a)
+            prod *= mesh.shape[a]
+    entry = (None if not chosen
+             else (chosen[0] if len(chosen) == 1 else tuple(chosen)))
+    return entry, set(chosen)
+
+
+def kv_cache_spec(shape: tuple, mesh: Mesh, *, lead: int = 0) -> P:
+    """PartitionSpec of a KV-cache leaf [*lead, B, Hkv, Nmax, *feat].
+
+    Matches what the cache's CONSUMERS (`softmax_attention` inside the
+    decode step) can use: kv heads over 'model' when they divide it, else
+    the SEQUENCE dim over 'model' (each device scans its slice of the
+    timeline; softmax's max/sum become clean partial reductions). The
+    head_dim/Dv trailing dim is deliberately never sharded — the old
+    last-dim-first generic policy put 'model' there, which no consumer
+    matmul could keep, and the partitioner answered with involuntary full
+    rematerializations of cache-sized tensors every step (the 3 SOFTMAX
+    32k-decode warnings, ROADMAP).
+    """
+    entries = [None] * len(shape)
+    b_entry, used = _batch_entry(mesh, shape[lead])
+    entries[lead] = b_entry
+    tp = model_axis_size(mesh)
+    if tp > 1 and len(shape) > lead + 2:
+        hkv, nmax = shape[lead + 1], shape[lead + 2]
+        if hkv % tp == 0:
+            entries[lead + 1] = "model"
+        elif nmax % tp == 0:
+            entries[lead + 2] = "model"
+    return P(*entries)
+
+
+def constrain_kv_cache(x, *, lead: int = 0):
+    """with_sharding_constraint to `kv_cache_spec` (no-op without a mesh).
+
+    Applied by the softmax decode/prefill step to the freshly-updated
+    cache so the in-step tensors keep the committed inter-step layout."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, kv_cache_spec(x.shape, mesh, lead=lead))
+
+
+# base ndims of the Moments fields (batch, kv-heads leading): any extra
+# leading axes on a state leaf are layer-stacking (scan-over-layers groups)
+_MOMENT_NDIM = {"m0": 3, "m1": 4, "m2": 5, "g0": 2, "g1": 3, "g2": 4}
+
+
+def _moments_shardings(mom, mesh: Mesh):
+    """Shardings of a Moments(-shaped) state: the SAME partitioning the
+    shard_map-wrapped kernels use (repro.kernels.sharded), so the committed
+    inter-step layout and the kernel launch agree with zero resharding:
+
+      heads mode    (Hkv % tp == 0): kv-head dim over 'model';
+      feature mode  (else, Dv % tp == 0): value-feature (last) dim of
+                    m0/m1/m2 over 'model', scalar g-moments REPLICATED
+                    across 'model' (they are Dv-times smaller than their m
+                    partners; replicating them keeps the decode step's
+                    denominator exact shard-locally instead of resharding
+                    g2 over the ICI every token).
+    """
+    tp = model_axis_size(mesh)
+    fields = type(mom)._fields if hasattr(type(mom), "_fields") else \
+        tuple(_MOMENT_NDIM)
+
+    hkv = None
+    dv = None
+    lead = mom[0].ndim - _MOMENT_NDIM["m0"]
+    if lead >= 0:
+        hkv = mom[0].shape[lead + 1]
+        dv = mom[0].shape[-1]
+    heads_mode = tp > 1 and hkv is not None and hkv % tp == 0
+    feat_mode = (not heads_mode and tp > 1 and dv is not None
+                 and dv % tp == 0)
+
+    def one(name, leaf):
+        nd = _MOMENT_NDIM.get(name)
+        if nd is None or leaf.ndim < nd:
+            return NamedSharding(mesh, P())
+        ld = leaf.ndim - nd
+        entries = [None] * leaf.ndim
+        entries[ld], _ = _batch_entry(mesh, leaf.shape[ld])
+        if heads_mode:
+            entries[ld + 1] = "model"
+        elif feat_mode and name in ("m0", "m1", "m2"):
+            entries[-1] = "model"
+        return NamedSharding(mesh, P(*entries))
+
+    return type(mom)(*(one(n, leaf) for n, leaf in zip(fields, mom)))
+
+
 def decode_state_shardings(state_shapes, mesh: Mesh, *, batch: int):
     """Shard a decode-state tree (KV caches / fastmax moments / ssm states).
 
-    Strategy per leaf [B, ...rest]: batch -> (pod, data) when divisible;
-    then the LARGEST remaining dims -> remaining mesh axes (model first).
-    This realizes: moment-feature TP for fastmax (D or D^2 over "model"),
-    sequence-sharded KV caches (N over "model"), and full feature sharding
-    ("data"+"model") for batch=1 long-context decode.
+    Structured nodes get consumer-matched policies — `Moments` the
+    shard_map kernel partitioning (`_moments_shardings`), `KVCache`
+    k/v/mask the `kv_cache_spec` head-or-sequence layout. Generic leaves
+    (ssm/xlstm states) keep the greedy policy: batch -> (pod, data) when
+    divisible, then the LARGEST remaining dims -> remaining mesh axes
+    (model first), realizing full feature sharding ("data"+"model") for
+    batch=1 long-context decode.
     """
-    def one(leaf):
+    from repro.attention.state import KVCache
+    from repro.core.fastmax import Moments
+
+    def generic(leaf):
         shape = leaf.shape
         if not shape:
             return NamedSharding(mesh, P())
-        used: set = set()
         out = []
         # dim 0 = batch
-        b_axes = []
-        prod = 1
-        for a in ("pod", "data"):
-            if a in mesh.axis_names and shape[0] % (prod * mesh.shape[a]) == 0 \
-                    and shape[0] > 1:
-                b_axes.append(a)
-                prod *= mesh.shape[a]
-        for a in b_axes:
-            used.add(a)
-        out.append(None if not b_axes
-                   else (b_axes[0] if len(b_axes) == 1 else tuple(b_axes)))
-        # remaining dims: LAST dim first (fastmax moments combine locally
-        # when the Dv dim is sharded; the m-dim gets sliced by the m-block
-        # loop and must stay unsharded), then largest remaining
+        b_entry, used = _batch_entry(mesh, shape[0])
+        out.append(b_entry)
+        # remaining dims: LAST dim first (feature dims combine locally when
+        # sharded; scan-sliced dims must stay unsharded), then largest
         order = sorted(range(1, len(shape)),
                        key=lambda i: (0 if i == len(shape) - 1 else 1,
                                       -shape[i]))
@@ -234,4 +357,23 @@ def decode_state_shardings(state_shapes, mesh: Mesh, *, batch: int):
         out.extend(specs[i] for i in range(1, len(shape)))
         return NamedSharding(mesh, P(*out))
 
-    return jax.tree.map(one, state_shapes)
+    def kv_shardings(kv):
+        lead = kv.k.ndim - 4
+        def one(name, leaf):
+            if name in ("k", "v", "mask"):
+                return NamedSharding(
+                    mesh, kv_cache_spec(leaf.shape, mesh, lead=lead))
+            return NamedSharding(mesh, P())  # length scalar
+        return type(kv)(*(one(n, leaf)
+                          for n, leaf in zip(type(kv)._fields, kv)))
+
+    def node(x):
+        if isinstance(x, Moments):
+            return _moments_shardings(x, mesh)
+        if isinstance(x, KVCache):
+            return kv_shardings(x)
+        return jax.tree.map(generic, x)
+
+    return jax.tree.map(
+        node, state_shapes,
+        is_leaf=lambda x: isinstance(x, (Moments, KVCache)))

@@ -1,6 +1,24 @@
-"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
-must see 1 device; only the dry-run (and the subprocess sharding tests)
-force host platform device counts."""
+"""Shared test fixtures. NOTE: no XLA_FLAGS by default — smoke tests and
+benches must see 1 device; only the dry-run (and the subprocess sharding
+tests) force host platform device counts.
+
+Multi-device tier (`make test-shard`): setting REPRO_TEST_DEVICES=N in the
+environment makes this conftest inject
+`--xla_force_host_platform_device_count=N` BEFORE jax is imported (the flag
+is read at backend init, so it cannot be a fixture) — the shard_map parity
+tests in test_shard_map.py then see N host devices; without the variable
+they skip via the `shard_devices` fixture and the full gate covers them
+through a subprocess wrapper instead.
+"""
+import os
+
+if os.environ.get("REPRO_TEST_DEVICES"):
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count="
+            + os.environ["REPRO_TEST_DEVICES"]).strip()
+
 import jax
 import numpy as np
 import pytest
@@ -24,6 +42,15 @@ def _x64():
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def shard_devices():
+    """>= 8 host devices, or skip (run this tier via `make test-shard`)."""
+    if jax.device_count() < 8:
+        pytest.skip("needs >= 8 devices: run `make test-shard` "
+                    "(REPRO_TEST_DEVICES=8)")
+    return jax.devices()[:8]
 
 
 def make_qkv(rng, b, hq, hkv, n, d, dv, dtype=np.float32, normalized=False):

@@ -1,0 +1,310 @@
+"""Multi-device parity tier: shard_map-wrapped fastmax kernels and the
+sharding-aware chunked scan vs their single-device oracles.
+
+Runs on 8 forced host CPU devices — `make test-shard` sets
+REPRO_TEST_DEVICES=8 so tests/conftest.py injects
+`--xla_force_host_platform_device_count=8` before jax initializes; in a
+normal 1-device session every test here skips (the full gate covers them
+through the subprocess wrapper in test_sharding.py).
+
+Covered:
+  * forward + emitted-state parity of the shard_map prefill kernel, both
+    partitionings (heads mode, feature mode), p ∈ {1,2}, GQA;
+  * 256-step decode: the shard_map fused decode kernel stays in lockstep
+    with the single-device kernel;
+  * backward parity of the shard_map trainable kernel (fused Pallas bwd
+    applied per shard) vs the single-device kernel and vs the
+    REPRO_FASTMAX_BWD=jnp §2.5 oracle, f64/f32/bf16;
+  * grad equivalence of the feature-TP sharding-aware chunked scan on a
+    train-shaped toy vs the unsharded jnp oracle, f32/bf16;
+  * the decode-state sharding policy (moments + KV cache) matches the
+    kernel ShardPlan partitioning.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+pytestmark = pytest.mark.shard
+
+
+def mk(rng, b, hq, hkv, n, d, dv, dtype):
+    from repro.core.ref import normalize_qk
+    q = normalize_qk(jnp.asarray(rng.normal(size=(b, hq, n, d)), dtype))
+    k = normalize_qk(jnp.asarray(rng.normal(size=(b, hkv, n, d)), dtype))
+    v = jnp.asarray(rng.normal(size=(b, hkv, n, dv)), dtype)
+    return q, k, v
+
+
+def _mesh(shape):
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh(shape, ("data", "model"))
+
+
+# (mesh shape, hkv, hq) per partitioning mode: heads needs Hkv % tp == 0,
+# feature exercises GQA/MQA kv heads that do NOT divide the model axis
+MODES = {
+    "heads": dict(mesh=(2, 4), hkv=4, hq=8),
+    "feature": dict(mesh=(2, 4), hkv=2, hq=4),
+    "heads_tp2": dict(mesh=(4, 2), hkv=2, hq=8),
+}
+
+
+def _plan_for(mesh, q, k, v):
+    from repro.kernels.sharded import plan_kernel_sharding
+    plan = plan_kernel_sharding(mesh, batch=q.shape[0], hq=q.shape[1],
+                                hkv=k.shape[1], dv=v.shape[-1])
+    assert plan is not None
+    return plan
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+@pytest.mark.parametrize("p", [1, 2])
+def test_sharded_prefill_matches_single_device(shard_devices, mode, p):
+    """Forward outputs AND the kernel-emitted final carry are identical
+    between the shard_map launch and the single-device kernel."""
+    from repro.kernels.ops import fastmax_prefill_kernel
+    from repro.kernels.sharded import fastmax_prefill_sharded
+
+    cfgm = MODES[mode]
+    rng = np.random.default_rng(hash((mode, p)) % 2**31)
+    q, k, v = mk(rng, 4, cfgm["hq"], cfgm["hkv"], 40, 4, 8, jnp.float64)
+    o_ref, st_ref = fastmax_prefill_kernel(q, k, v, p=p, chunk_size=16)
+
+    mesh = _mesh(cfgm["mesh"])
+    with mesh:
+        plan = _plan_for(mesh, q, k, v)
+        assert plan.mode == ("feature" if mode == "feature" else "heads")
+        o_sh, st_sh = fastmax_prefill_sharded(
+            q, k, v, p=p, chunk_size=16, denom_eps=1e-6, plan=plan)
+    np.testing.assert_allclose(np.asarray(o_sh), np.asarray(o_ref),
+                               rtol=1e-12, atol=1e-12)
+    for a, b in zip(st_sh, st_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("mode", ["heads", "feature"])
+@pytest.mark.parametrize("p", [1, 2])
+def test_sharded_decode_256_steps_lockstep(shard_devices, mode, p):
+    """Prefill + 256 fused decode steps: the shard_map kernel state stays
+    bit-for-bit with the single-device kernel over a long horizon."""
+    from repro.kernels.ops import fastmax_decode, fastmax_prefill_kernel
+    from repro.kernels.sharded import fastmax_decode_sharded
+
+    cfgm = MODES[mode]
+    rng = np.random.default_rng(7 + p)
+    b, hq, hkv, d, dv = 2, cfgm["hq"], cfgm["hkv"], 4, 8
+    q, k, v = mk(rng, b, hq, hkv, 16, d, dv, jnp.float64)
+    _, st = fastmax_prefill_kernel(q, k, v, p=p, chunk_size=8)
+    st_ref = tuple(st)
+    st_sh = tuple(st)
+
+    mesh = _mesh(cfgm["mesh"])
+    with mesh:
+        plan = _plan_for(mesh, q, k, v)
+        step_sh = jax.jit(lambda q, k, v, st: fastmax_decode_sharded(
+            q, k, v, st, p=p, denom_eps=1e-6, plan=plan))
+        for i in range(256):
+            q1, k1, v1 = mk(rng, b, hq, hkv, 1, d, dv, jnp.float64)
+            o_ref, st_ref = fastmax_decode(q1, k1, v1, st_ref, p=p)
+            o_sh, st_sh = step_sh(q1, k1, v1, tuple(st_sh))
+            if i % 64 == 63:
+                np.testing.assert_allclose(np.asarray(o_sh),
+                                           np.asarray(o_ref),
+                                           rtol=1e-12, atol=1e-12)
+    for a, b in zip(st_sh, st_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("mode", ["heads", "heads_tp2"])
+@pytest.mark.parametrize("p", [1, 2])
+def test_sharded_trainable_backward_matches_single_device(shard_devices,
+                                                          mode, p):
+    """Grads through the shard_map trainable kernel (fused Pallas backward
+    per shard) == grads through the single-device kernel, f64."""
+    from repro.kernels.ops import fastmax
+    from repro.kernels.sharded import fastmax_sharded
+
+    cfgm = MODES[mode]
+    rng = np.random.default_rng(hash((mode, p, "bwd")) % 2**31)
+    q, k, v = mk(rng, 4, cfgm["hq"], cfgm["hkv"], 33, 4, 8, jnp.float64)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.sin(fastmax(q, k, v, p=p, causal=True,
+                                       chunk_size=16)))
+
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+
+    mesh = _mesh(cfgm["mesh"])
+    with mesh:
+        plan = _plan_for(mesh, q, k, v)
+        assert plan.mode == "heads"
+
+        def loss_sh(q, k, v):
+            return jnp.sum(jnp.sin(fastmax_sharded(
+                q, k, v, p=p, causal=True, chunk_size=16, denom_eps=1e-6,
+                plan=plan)))
+
+        g_sh = jax.grad(loss_sh, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_sh, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-10, atol=1e-11)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 5e-2)])
+def test_sharded_kernel_grads_vs_jnp_oracle(shard_devices, monkeypatch,
+                                            dtype, tol):
+    """Heads-mode shard_map kernel grads vs the unsharded
+    REPRO_FASTMAX_BWD=jnp §2.5 oracle, low precision."""
+    from repro.kernels.sharded import fastmax_sharded
+
+    rng = np.random.default_rng(23)
+    q, k, v = mk(rng, 2, 8, 4, 48, 4, 8, dtype)
+
+    monkeypatch.setenv("REPRO_FASTMAX_BWD", "jnp")
+    from repro.kernels.ops import fastmax
+
+    def loss_oracle(q, k, v):
+        return jnp.sum(fastmax(q, k, v, p=2, causal=True, chunk_size=16))
+
+    g_ref = jax.grad(loss_oracle, argnums=(0, 1, 2))(q, k, v)
+    monkeypatch.delenv("REPRO_FASTMAX_BWD")
+
+    mesh = _mesh((2, 4))
+    with mesh:
+        plan = _plan_for(mesh, q, k, v)
+
+        def loss_sh(q, k, v):
+            return jnp.sum(fastmax_sharded(q, k, v, p=2, causal=True,
+                                           chunk_size=16, denom_eps=1e-6,
+                                           plan=plan))
+
+        g_sh = jax.grad(loss_sh, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_sh, g_ref):
+        a = np.asarray(a, np.float64)
+        b = np.asarray(b, np.float64)
+        rel = np.abs(a - b).max() / max(np.abs(b).max(), 1e-6)
+        assert rel <= tol, f"rel err {rel} > {tol}"
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 5e-2)])
+def test_feature_tp_scan_grads_match_unsharded_oracle(shard_devices,
+                                                      monkeypatch, dtype,
+                                                      tol):
+    """Satellite: the sharding-aware chunked scan under a feature-TP mesh
+    (kv heads don't divide 'model'; stacked chunks pinned, carry
+    constrained) produces the same grads as the unsharded jnp oracle
+    (REPRO_FASTMAX_BWD=jnp) on a train-shaped toy."""
+    from repro.attention import AttentionSpec, attention
+
+    spec = AttentionSpec(family="fastmax", p=2, impl="kernel", chunk_size=16)
+    rng = np.random.default_rng(31)
+    # train-shaped toy: batch over 'data', kv heads NOT divisible by tp=4
+    q, k, v = mk(rng, 4, 4, 2, 64, 4, 8, dtype)
+
+    monkeypatch.setenv("REPRO_FASTMAX_BWD", "jnp")
+
+    def loss(q, k, v):
+        return jnp.sum(attention(q, k, v, spec, causal=True))
+
+    g_ref = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    monkeypatch.delenv("REPRO_FASTMAX_BWD")
+
+    mesh = _mesh((2, 4))
+    with mesh:
+        from repro.attention.api import feature_shard_flag
+        assert feature_shard_flag(k.shape[1])  # 2 % 4 != 0 -> feature-TP
+        g_sh = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_sh, g_ref):
+        a = np.asarray(a, np.float64)
+        b = np.asarray(b, np.float64)
+        rel = np.abs(a - b).max() / max(np.abs(b).max(), 1e-6)
+        assert rel <= tol, f"rel err {rel} > {tol}"
+
+
+@pytest.mark.parametrize("mode", ["heads", "feature"])
+def test_state_protocol_routes_sharded_kernel(shard_devices, monkeypatch,
+                                              mode):
+    """End to end through repro.attention prefill/step under a mesh with
+    REPRO_DECODE_KERNEL=1: routed to the shard_map kernels (no jnp-fallback
+    log) and numerically equal to full causal attention."""
+    import dataclasses
+
+    from repro.attention import AttentionSpec, attention, init_state
+    from repro.attention import prefill as a_prefill
+    from repro.attention import step as a_step
+    from repro.attention import registry as _reg
+
+    monkeypatch.setenv("REPRO_DECODE_KERNEL", "1")
+    cfgm = MODES[mode]
+    spec = AttentionSpec(family="fastmax", p=2, impl="kernel", chunk_size=8)
+    rng = np.random.default_rng(5)
+    b, hq, hkv, n, d, dv = 2, cfgm["hq"], cfgm["hkv"], 21, 4, 8
+    q = jnp.asarray(rng.normal(size=(b, hq, n, d)), jnp.float64)
+    k = jnp.asarray(rng.normal(size=(b, hkv, n, d)), jnp.float64)
+    v = jnp.asarray(rng.normal(size=(b, hkv, n, dv)), jnp.float64)
+    full = attention(q, k, v, dataclasses.replace(spec, impl="oracle"),
+                     causal=True)
+
+    mesh = _mesh(cfgm["mesh"])
+    with mesh:
+        st = init_state(spec, batch=b, n_kv_heads=hkv, q_head_dim=d,
+                        v_head_dim=dv, max_len=n, dtype=jnp.float64)
+        pre = 13
+        before = set(_reg._LOGGED)
+        o_pre, st = a_prefill(q[:, :, :pre], k[:, :, :pre], v[:, :, :pre],
+                              spec, state=st)
+        outs = [o_pre]
+        for t in range(pre, n):
+            o_t, st = a_step(st, q[:, :, t:t + 1], k[:, :, t:t + 1],
+                             v[:, :, t:t + 1], spec)
+            outs.append(o_t)
+        new_logs = set(_reg._LOGGED) - before
+    assert any("shard_map" in m for m in new_logs), new_logs
+    assert not any("-> jnp" in m for m in new_logs), new_logs
+    got = jnp.concatenate(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=1e-8, atol=1e-9)
+
+
+def test_decode_state_shardings_match_kernel_plan(shard_devices):
+    """The committed inter-step state layout == the shard_map kernel
+    partitioning, for both modes; KV caches are head- or sequence-sharded,
+    never on head_dim."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.attention import AttentionSpec, init_state
+    from repro.sharding.rules import decode_state_shardings
+
+    mesh = _mesh((2, 4))
+
+    def specs(hkv, family="fastmax"):
+        spec = AttentionSpec() if family == "fastmax" else \
+            AttentionSpec(family="softmax")
+        st = jax.eval_shape(lambda: init_state(
+            spec, batch=4, n_kv_heads=hkv, q_head_dim=8, v_head_dim=8,
+            max_len=64))
+        return decode_state_shardings(st, mesh, batch=4)
+
+    # heads mode: Hkv=4 divides tp=4
+    sh = specs(4)
+    assert sh.moments.m2.spec == P("data", "model", None, None, None)
+    assert sh.moments.g2.spec == P("data", "model", None, None)
+    # feature mode: Hkv=2 doesn't divide; m-moments on Dv, g replicated
+    sh = specs(2)
+    assert sh.moments.m2.spec == P("data", None, None, None, "model")
+    assert sh.moments.m0.spec == P("data", None, "model")
+    assert sh.moments.g2.spec == P("data", None, None, None)
+    # softmax KV cache: heads when divisible...
+    sh = specs(4, family="softmax")
+    assert sh.kv.k.spec == P("data", "model", None, None)
+    # ...else the sequence dim — and NEVER head_dim
+    sh = specs(2, family="softmax")
+    assert sh.kv.k.spec == P("data", None, "model", None)
+    assert sh.kv.mask.spec == P("data", None, "model")

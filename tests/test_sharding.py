@@ -102,6 +102,49 @@ _SUBPROC = textwrap.dedent("""
 
 
 @pytest.mark.slow
+def test_shard_map_parity_tier_subprocess():
+    """The full gate runs the 8-device shard_map/feature-TP parity tier
+    (tests/test_shard_map.py) in a subprocess — the same thing
+    `make test-shard` runs interactively (the tests skip at 1 device)."""
+    import os
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-m", "shard", "-x",
+         "tests/test_shard_map.py"],
+        capture_output=True, text=True, timeout=1800,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+             "HOME": "/root", "REPRO_TEST_DEVICES": "8"},
+    )
+    assert out.returncode == 0, (out.stdout[-2000:] + out.stderr[-2000:])
+    assert " skipped" not in out.stdout.splitlines()[-1], out.stdout[-300:]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("cell", [
+    # the 3 SOFTMAX 32k-decode KV-cache remat warnings stay fixed
+    ["--arch", "llama3-405b", "--shape", "decode_32k", "--attn", "softmax",
+     "--assert-no-remat"],
+    # TP=16 decode routes to the shard_map Pallas decode kernel (no jnp
+    # fallback) with a remat-clean partition
+    ["--arch", "qwen2.5-32b", "--shape", "decode_32k", "--attn",
+     "fastmax2-kernel", "--assert-no-remat", "--assert-kernel-route"],
+    # feature-TP scan constraints on the training path stay remat-free
+    ["--arch", "qwen2.5-32b", "--shape", "train_4k", "--assert-no-remat"],
+])
+def test_dryrun_sharding_health_gates(cell, tmp_path):
+    """Regression gates over the dryrun's machine-checkable diagnostics
+    (xla_remat count + attn_routing record) for the shard-native cells."""
+    import os
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *cell,
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=1800,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+             "HOME": "/root"},
+    )
+    assert out.returncode == 0, (out.stdout[-1500:] + out.stderr[-1500:])
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2.5-32b", "kimi-k2-1t-a32b"])
 def test_dryrun_8dev_subprocess(arch):
     """End-to-end sharded lower+compile on a 4x2 virtual mesh; collectives
