@@ -1,7 +1,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-fast test-attention test-kernels test-shard dryrun-gate \
-	bench bench-json
+	bench bench-json ci-fast
 
 # full tier-1 suite (everything, incl. multi-minute subprocess compiles)
 test:
@@ -29,16 +29,25 @@ test-shard:
 	REPRO_TEST_DEVICES=8 $(PY) -m pytest -q -m shard tests/test_shard_map.py
 
 # sharding-health gate: the cells the shard-native work must keep clean —
-# 0 involuntary remats on train_4k (feature-TP scan) and decode_32k, and
-# the TP=16 decode routed to the shard_map Pallas kernels (no jnp fallback)
+# 0 involuntary remats on train_4k (feature-TP scan AND the feature-TP
+# kernel training path) and decode_32k, decode routed to the shard_map
+# Pallas kernels (no jnp fallback), and TP=16 training routed to the
+# shard_map[feature] Dv-blocked kernels (no chunked-scan fallback)
 dryrun-gate:
 	$(PY) -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k \
 		--assert-no-remat --out results/dryrun-gate
+	$(PY) -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k \
+		--attn fastmax2-kernel --assert-no-remat --assert-kernel-route \
+		--out results/dryrun-gate
 	$(PY) -m repro.launch.dryrun --arch qwen2.5-32b --shape decode_32k \
 		--attn fastmax2-kernel --assert-no-remat --assert-kernel-route \
 		--out results/dryrun-gate
 	$(PY) -m repro.launch.dryrun --arch llama3-405b --shape decode_32k \
 		--attn softmax --assert-no-remat --out results/dryrun-gate
+
+# mirror the CI PR job locally (`.github/workflows/ci.yml` fast tier):
+# the three suites a PR must keep green, in the same order
+ci-fast: test-fast test-kernels test-shard
 
 bench:
 	$(PY) -m benchmarks.run --quick

@@ -82,7 +82,13 @@ def _bench_tp_decode(*, quick: bool) -> dict:
     if out.returncode != 0:
         raise RuntimeError(f"tp-decode subprocess failed: "
                            f"{out.stderr[-800:]}")
-    return json.loads(out.stdout.strip().splitlines()[-1])
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    # the subprocess runs on forced HOST devices, so its kernels are
+    # interpret-mode even when this process sits on a TPU — label the cell
+    # so the regression check never compares it against a compiled-TPU
+    # baseline (or vice versa)
+    res["interpret"] = True
+    return res
 
 
 def _mk(rng, b, hq, hkv, n, d, dv, dtype):
@@ -151,6 +157,14 @@ def collect(quick: bool = True) -> dict:
         suites["fastmax2-kernel-tp4"] = _bench_tp_decode(quick=quick)
     except Exception as e:  # noqa: BLE001
         print(f"attn_phases: tp-decode cell skipped ({e})", file=sys.stderr)
+    # off-TPU the Pallas suites run interpret-mode kernel bodies: label the
+    # cells so the regression check only ever compares like with like
+    # (interpret timings are Python-loop-bound and NOT comparable to either
+    # compiled-TPU numbers or the pure-jnp suites' XLA timings)
+    if jax.default_backend() != "tpu":
+        for name in suites:
+            if "kernel" in name:
+                suites[name]["interpret"] = True
     return {
         "meta": {
             "platform": jax.default_backend(),
@@ -166,6 +180,8 @@ def rows(results: dict):
     `attn_phases/<suite>/<phase>` naming lives."""
     for name, phases in results["suites"].items():
         for phase, us in phases.items():
+            if not phase.endswith("_us"):
+                continue   # cell annotations (e.g. `interpret`), not timings
             yield csv_row(f"attn_phases/{name}/{phase[:-3]}", us)
 
 

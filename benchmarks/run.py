@@ -22,24 +22,38 @@ REGRESSION_THRESHOLD = 1.20
 
 
 def _regression_summary(baseline: dict, fresh: dict) -> str:
-    """One line comparing fresh phase timings to the committed baseline."""
+    """One line comparing fresh phase timings to the committed baseline.
+
+    Only `*_us` keys are timings; other cell keys are annotations. A cell
+    whose `interpret` label differs from the baseline's is skipped: an
+    interpret-mode (forced-host-device / off-TPU Pallas) timing is never
+    comparable to a compiled one, whatever `meta.platform` says — the TP
+    subprocess cell is interpret even on a TPU host.
+    """
     if baseline.get("meta", {}).get("platform") != \
             fresh.get("meta", {}).get("platform") or \
             baseline.get("meta", {}).get("quick") != \
             fresh.get("meta", {}).get("quick"):
         return ("bench-json: baseline platform/mode differs — regression "
                 "check skipped")
-    slow = []
+    slow, skipped = [], []
     for suite, phases in fresh.get("suites", {}).items():
         base_p = baseline.get("suites", {}).get(suite, {})
+        if base_p.get("interpret") != phases.get("interpret"):
+            skipped.append(suite)
+            continue
         for phase, us in phases.items():
+            if not phase.endswith("_us"):
+                continue
             b = base_p.get(phase)
             if b and us > b * REGRESSION_THRESHOLD:
                 slow.append(f"{suite}/{phase[:-3]} {b:.0f}->{us:.0f}us")
+    note = (f" (skipped interpret-label mismatch: {', '.join(skipped)})"
+            if skipped else "")
     if slow:
         return ("bench-json: WARNING — >20% slower than baseline: "
-                + "; ".join(slow))
-    return "bench-json: OK (no >20% regressions vs baseline)"
+                + "; ".join(slow) + note)
+    return f"bench-json: OK (no >20% regressions vs baseline){note}"
 
 
 def main() -> None:

@@ -99,12 +99,18 @@ def _kernel_fn(q, k, v, spec: AttentionSpec, *, causal, kv_mask, rng,
     spec = spec.resolved()
     mesh = nontrivial_mesh()
     if mesh is not None:
+        from repro.kernels.ops import use_pallas_bwd
         plan = plan_kernel_sharding(mesh, batch=q.shape[0], hq=q.shape[1],
                                     hkv=k.shape[1], dv=v.shape[-1])
-        if plan is not None and plan.mode == "heads":
-            # fwd AND the fused Pallas bwd run shard-local per (batch,
-            # kv-head) — autodiff of the shard_map applies the custom_vjp
-            # per shard
+        if plan is not None and (plan.mode == "heads"
+                                 or (causal and use_pallas_bwd())):
+            # heads mode: fwd AND the fused Pallas bwd run shard-local per
+            # (batch, kv-head) — autodiff of the shard_map applies the
+            # custom_vjp per shard. feature mode (causal): the Dv-blocked
+            # kernels run per value-feature shard — forward collective-
+            # free, backward with one psum of the partial dq/dk per
+            # launch; REPRO_FASTMAX_BWD=jnp restores the sharding-aware
+            # chunked scan (the equivalence oracle).
             from repro.kernels.sharded import fastmax_sharded
             _log_once(f"attention: fastmax-kernel {plan.describe()}")
             qh = normalize_qk(q) if spec.normalize else q
@@ -112,12 +118,14 @@ def _kernel_fn(q, k, v, spec: AttentionSpec, *, causal, kv_mask, rng,
             return fastmax_sharded(qh, kh, v, p=spec.p, causal=causal,
                                    chunk_size=spec.chunk_size,
                                    denom_eps=spec.denom_eps, plan=plan)
-        # feature-TP mesh (kv heads don't divide 'model'): the fused
-        # backward contracts over the full Dv per chunk, so the trainable
-        # path runs the sharding-aware chunked scan instead
+        # unpartitionable mesh (kv heads AND Dv indivisible), noncausal
+        # feature-TP, or the jnp backward oracle: sharding-aware chunked
+        # scan
         _log_once(
-            "attention: fastmax-kernel under 'model' mesh without "
-            "head-divisible kv heads -> chunked scan (feature-TP)")
+            "attention: fastmax-kernel under 'model' mesh without a "
+            "kernel-shardable plan for this call (unpartitionable dims, "
+            "noncausal feature-TP, or REPRO_FASTMAX_BWD=jnp) "
+            "-> chunked scan (feature-TP)")
         return _chunked_fn(q, k, v, spec, causal=causal, kv_mask=None,
                            rng=None, feature_shard=feature_shard)
     qh = normalize_qk(q) if spec.normalize else q
@@ -163,8 +171,12 @@ register(Backend(
 # masked call must reroute to chunked. The inference-only prefill protocol
 # (repro.attention.prefill) uses the kernel's mask support directly.
 # feature_shard=True: under a 'model' mesh the kernels run shard_map-
-# wrapped (heads mode — `repro.kernels.sharded`); a feature-TP mesh routes
-# the trainable path to the sharding-aware chunked scan, honoring the flag.
+# wrapped (`repro.kernels.sharded`) — heads mode when kv heads divide the
+# axis, else feature mode with the Dv-blocked backward launched per value-
+# feature shard (causal training included; one psum of the partial dq/dk
+# per launch). Only unpartitionable dims, noncausal feature-TP calls, or
+# REPRO_FASTMAX_BWD=jnp fall back to the sharding-aware chunked scan,
+# honoring the flag.
 register(Backend(
     name="fastmax-kernel",
     family="fastmax",

@@ -18,6 +18,13 @@ each step is the fused update+combine decode kernel. Off-TPU the protocol
 falls back to the jnp moment step with one logged routing line
 (REPRO_DECODE_KERNEL=1 forces the kernel in interpret mode — tests/CI;
 =0 disables it everywhere).
+
+Under a multi-device mesh the kernels launch shard_map-wrapped
+(`repro.kernels.sharded`) in heads or feature (Dv) mode — since the
+Dv-blocked backward landed, that covers TRAINING at every TP degree too
+(`attention/backends.py`), so the serve protocol here and the trainable
+path commit one and the same moment layout between steps
+(`decode_state_shardings`).
 """
 from __future__ import annotations
 

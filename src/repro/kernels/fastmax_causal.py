@@ -9,15 +9,23 @@ VMEM scratch (O(D^{p+1}) bytes total), and every heavy op is an MXU matmul:
   intra-chunk:  S = Q K^T  (C×C),  f(S) masked, f(S)·V
   inter-chunk:  φ₂(Q) contracted against the moment carry, blocked over the
                 first moment index so each step is a
-                [G·C, bm·D] @ [bm·D, Dv] matmul (bm chosen so bm·D ≈ 256-512)
+                [G·C, bm·D] @ [bm·D, blk] matmul (bm chosen so bm·D ≈ 256-512)
 
 Layout notes (TPU):
-  * degree-2 moment scratch is [D·D, Dv] (m-major) so both the update
+  * degree-2 moment scratch is [D·D, blk] (m-major) so both the update
     (T^T @ V) and the query contraction slice contiguous row blocks — no
     reshapes of scratch, only a [C, bm, D] → [C, bm·D] collapse of the
     last two dims of a freshly built tile.
-  * grid = (B·Hkv, N/C): head axis "parallel" (independent), chunk axis
-    "arbitrary" (sequential — the scan carry).
+  * the VALUE-FEATURE axis of the carry (and of v / o / the emitted
+    m-moments) is tiled into nb = Dv/blk independent column blocks
+    (`pick_blk`): per-block scratch is D²·blk·4 bytes, so D = Dv = 128
+    heads fit VMEM (blk = Dv ⇒ nb = 1 reproduces the unblocked schedule
+    exactly). Each block redundantly recomputes the Dv-independent parts
+    (QK^T, the denominator, the g-carry) and emits ITS slice of o and the
+    m-moments — outputs slice cleanly because o = num/(den+eps) splits
+    along Dv.
+  * grid = (B·Hkv, nb, N/C): head and Dv-block axes "parallel"
+    (independent), chunk axis "arbitrary" (sequential — the scan carry).
   * GQA: Q arrives [B·Hkv, G, N, D]; the G query heads of a group are
     flattened into matmul rows so moments are computed ONCE per kv head
     (the paper's reference code recomputes them per q head).
@@ -36,7 +44,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import tpu_compiler_params
-from repro.kernels.tiling import pick_bm
+from repro.kernels.tiling import FWD_BLK_BUDGET, pick_blk, pick_bm
 
 __all__ = ["fastmax_causal_pallas"]
 
@@ -66,8 +74,8 @@ def _causal_kernel(
         (m0o, m1o, m2o, g0o, g1o, g2o) = refs[:6]
         refs = refs[6:]
     m0_s, m1_s, m2_s, g0_s, g1_s, g2_s = refs
-    c = pl.program_id(1)
-    nc = pl.num_programs(1)
+    c = pl.program_id(2)
+    nc = pl.num_programs(2)
     g, cs, d = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
     dv = v_ref.shape[2]
 
@@ -158,7 +166,7 @@ def _causal_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("p", "chunk_size", "denom_eps", "interpret", "out_dtype",
-                     "return_state"),
+                     "return_state", "blk"),
 )
 def fastmax_causal_pallas(
     q: jnp.ndarray,  # [B, Hq, N, D]  (pre-normalized q̂)
@@ -172,12 +180,17 @@ def fastmax_causal_pallas(
     interpret: bool = False,
     out_dtype=None,
     return_state: bool = False,
+    blk: int | None = None,
 ):
     """Causal fastmax. With `return_state=True` additionally returns the
     final moment carry as a tuple (m0, m1, m2, g0, g1, g2) with shapes
     ([B,Hkv,Dv], [B,Hkv,D,Dv], [B,Hkv,D,D,Dv], [B,Hkv], [B,Hkv,D],
     [B,Hkv,D,D]) in the accumulator dtype — emitted by the kernel itself
-    (no second pass over k/v), ready for streaming decode."""
+    (no second pass over k/v), ready for streaming decode.
+
+    `blk` is the Dv carry-block width (must divide Dv); None picks the
+    largest divisor whose degree-2 scratch tuple fits `FWD_BLK_BUDGET`
+    (nb = Dv/blk = 1 below 128×128 heads — the unblocked schedule)."""
     b, hq, n, d = q.shape
     hkv = k.shape[1]
     dv = v.shape[-1]
@@ -203,18 +216,24 @@ def fastmax_causal_pallas(
     w = jnp.pad(w, ((0, 0), (0, 0), (0, pad))).reshape(b * hkv, nc * cs)
 
     bm = pick_bm(d)
+    if blk is None:
+        blk = pick_blk(d, dv, FWD_BLK_BUDGET)
+    if dv % blk:
+        raise ValueError(f"blk={blk} must divide Dv={dv}")
+    nb = dv // blk
     kernel = functools.partial(_causal_kernel, p=p, bm=bm, denom_eps=denom_eps,
                                acc=acc, emit_state=return_state)
     bh = b * hkv
-    sm = lambda h, c: (h, 0, 0)           # noqa: E731 carry-state blocks
-    out_specs = [pl.BlockSpec((1, g, cs, dv), lambda h, c: (h, 0, c, 0))]
+    sm = lambda h, b_, c: (h, 0, 0)       # noqa: E731 g-carry state blocks
+    vb = lambda h, b_, c: (h, 0, b_)      # noqa: E731 Dv-blocked m-state
+    out_specs = [pl.BlockSpec((1, g, cs, blk), lambda h, b_, c: (h, 0, c, b_))]
     out_shape = [jax.ShapeDtypeStruct((bh, g, nc * cs, dv), out_dtype)]
     if return_state:
         m2_rows = d * d if p >= 2 else 1
         out_specs += [
-            pl.BlockSpec((1, 1, dv), sm),
-            pl.BlockSpec((1, d, dv), sm),
-            pl.BlockSpec((1, m2_rows, dv), sm),
+            pl.BlockSpec((1, 1, blk), vb),
+            pl.BlockSpec((1, d, blk), vb),
+            pl.BlockSpec((1, m2_rows, blk), vb),
             pl.BlockSpec((1, 1, 1), sm),
             pl.BlockSpec((1, 1, d), sm),
             pl.BlockSpec((1, d, d), sm),
@@ -229,24 +248,32 @@ def fastmax_causal_pallas(
         ]
     outs = pl.pallas_call(
         kernel,
-        grid=(bh, nc),
+        grid=(bh, nb, nc),
         in_specs=[
-            pl.BlockSpec((1, g, cs, d), lambda h, c: (h, 0, c, 0)),
-            pl.BlockSpec((1, cs, d), lambda h, c: (h, c, 0)),
-            pl.BlockSpec((1, cs, dv), lambda h, c: (h, c, 0)),
-            pl.BlockSpec((1, cs), lambda h, c: (h, c)),
+            pl.BlockSpec((1, g, cs, d), lambda h, b_, c: (h, 0, c, 0)),
+            pl.BlockSpec((1, cs, d), lambda h, b_, c: (h, c, 0)),
+            pl.BlockSpec((1, cs, blk), lambda h, b_, c: (h, c, b_)),
+            pl.BlockSpec((1, cs), lambda h, b_, c: (h, c)),
         ],
         out_specs=out_specs if return_state else out_specs[0],
         out_shape=out_shape if return_state else out_shape[0],
         scratch_shapes=[
-            pltpu.VMEM((1, dv), acc),
-            pltpu.VMEM((d, dv), acc),
-            pltpu.VMEM((d * d if p >= 2 else 1, dv), acc),
+            pltpu.VMEM((1, blk), acc),
+            pltpu.VMEM((d, blk), acc),
+            pltpu.VMEM((d * d if p >= 2 else 1, blk), acc),
             pltpu.VMEM((1, 1), acc),
             pltpu.VMEM((1, d), acc),
             pltpu.VMEM((d, d), acc),
         ],
-        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
+        # nb must be sequential when emitting state: every Dv-block program
+        # writes the SAME g-state output block (identical values), and
+        # aliasing an output window across a "parallel" grid dim is
+        # undefined on megacore (two cores would DMA it concurrently).
+        # Without state outputs every block writes disjoint o slices, so
+        # nb stays parallel.
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary" if return_state else "parallel",
+             "arbitrary")),
         interpret=interpret,
         name=f"fastmax_causal_p{p}",
     )(qp, kp, vp, w)

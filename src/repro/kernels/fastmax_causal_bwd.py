@@ -16,14 +16,34 @@ per chunk, entirely in VMEM scratch:
   4. folds this chunk's moment-cotangent contributions into the carry-
      cotangent scratch for the chunks before it.
 
+Dv-blocked carry (the 128×128-head enabler): the carry AND carry-cotangent
+tuples are tiled over `nb = Dv/blk` value-feature column blocks along a
+parallel grid axis — per-program scratch is two [D², blk] tuples
+(~2·D²·blk·4 bytes) instead of two full [D², Dv] ones. The decomposition is
+exact, not approximate: with u = do·deni restricted to a block and
+sden_b = −Σ_j o_j u_j over the block's columns, EVERY backward term is
+linear in (u_b, sden_b, and the per-block carry-cotangents they fold into),
+while the nonlinear ingredients (den, 1/(den+eps), f'(QK^T), the mask) are
+Dv-independent and recomputed identically per block from the redundantly
+maintained g-carry. So
+
+  dv  — slices: each block owns its Dv columns exactly;
+  dq, dk — sum: the kernel emits per-block PARTIALS (leading nb axis, fp32
+  accumulator dtype) and the wrapper reduces them in one XLA sum.
+
+The same linearity is what makes the kernel shardable on Dv: a feature-TP
+shard is just the blocks of its Dv slice, with the partial dq/dk psummed
+across devices once per launch (`repro.kernels.sharded`).
+
 Every heavy op is an MXU matmul; the degree-2 tensors stream in the same
-m-major [bm·D, Dv] blocks as the forward. Scratch is two moment tuples
-(carry + carry-cotangent): O(D^{p+1}) bytes, independent of N — the §2.5
-bound, now with zero HBM round-trips for the reconstruction.
+m-major [bm·D, blk] blocks as the forward. Scratch is two moment tuples
+(carry + carry-cotangent): O(D²·blk) bytes, independent of N — the §2.5
+bound, now with zero HBM round-trips for the reconstruction AND a VMEM
+footprint that fits production 128×128 heads (blk = pick_blk ⇒ nb = 2).
 
 Validated in interpret mode against the jnp `_causal_scan_cg_bwd` oracle
 and oracle autodiff (tests/test_kernels.py) over p ∈ {1,2}, GQA group
-sizes, and dtypes.
+sizes, dtypes, and forced block widths (blk=1 ≡ blk=Dv bit-comparisons).
 """
 from __future__ import annotations
 
@@ -36,7 +56,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import tpu_compiler_params
 from repro.kernels.fastmax_causal import _poly
-from repro.kernels.tiling import pick_bm
+from repro.kernels.tiling import BWD_BLK_BUDGET, pick_blk, pick_bm
 
 __all__ = ["fastmax_causal_bwd_pallas"]
 
@@ -44,19 +64,19 @@ __all__ = ["fastmax_causal_bwd_pallas"]
 def _causal_bwd_kernel(
     q_ref,    # [1, G, C, D]
     k_ref,    # [1, C, D]
-    v_ref,    # [1, C, Dv]
-    w_ref,    # [1, C]        validity mask (1=real token)
-    do_ref,   # [1, G, C, Dv]
-    fm0_ref,  # [1, 1, Dv]    final moments (read once, at the last chunk)
-    fm1_ref,  # [1, D, Dv]
-    fm2_ref,  # [1, M2R, Dv]  m-major
-    fg0_ref,  # [1, 1, 1]
+    v_ref,    # [1, C, BLK]    this program's Dv column block
+    w_ref,    # [1, C]         validity mask (1=real token)
+    do_ref,   # [1, G, C, BLK]
+    fm0_ref,  # [1, 1, BLK]    final moments (read once, at the last chunk)
+    fm1_ref,  # [1, D, BLK]
+    fm2_ref,  # [1, M2R, BLK]  m-major
+    fg0_ref,  # [1, 1, 1]      g-moments: full (Dv-independent)
     fg1_ref,  # [1, 1, D]
     fg2_ref,  # [1, D, D]
-    dq_ref,   # [1, G, C, D]
-    dk_ref,   # [1, C, D]
-    dv_ref,   # [1, C, Dv]
-    # scratch: carry moments + carry-cotangent moments
+    dq_ref,   # [1, 1, G, C, D]  per-block PARTIAL (summed by the wrapper)
+    dk_ref,   # [1, 1, C, D]     per-block PARTIAL
+    dv_ref,   # [1, C, BLK]      exact slice
+    # scratch: carry moments + carry-cotangent moments (Dv-block columns)
     m0_s, m1_s, m2_s, g0_s, g1_s, g2_s,
     gm0_s, gm1_s, gm2_s, gg0_s, gg1_s, gg2_s,
     *,
@@ -65,9 +85,9 @@ def _causal_bwd_kernel(
     denom_eps: float,
     acc,
 ):
-    t = pl.program_id(1)   # reverse step: chunk = nc-1-t via the index maps
+    t = pl.program_id(2)   # reverse step: chunk = nc-1-t via the index maps
     g, cs, d = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
-    dv = v_ref.shape[2]
+    blk = v_ref.shape[2]
     gc = g * cs
     f32 = acc
 
@@ -91,12 +111,13 @@ def _causal_bwd_kernel(
     k = k_ref[0].astype(f32)
     v = v_ref[0].astype(f32)
     w = w_ref[0].astype(f32)
-    do = do_ref[0].astype(f32).reshape(gc, dv)
+    do = do_ref[0].astype(f32).reshape(gc, blk)
     kw = k * w[:, None]
     vw = v * w[:, None]
 
     # ---- 1. reversible carry: carry_before = carry_after − Δchunk --------
-    # (op-for-op mirror of the forward fold, so the subtraction is exact)
+    # (op-for-op mirror of the forward fold, so the subtraction is exact;
+    # the g-carry is Dv-independent and maintained redundantly per block)
     m0_s[...] -= jnp.sum(vw, axis=0, keepdims=True)
     m1_s[...] -= jnp.dot(kw.T, v, preferred_element_type=f32)
     g0_s[...] -= jnp.sum(w).reshape(1, 1)
@@ -114,7 +135,8 @@ def _causal_bwd_kernel(
         jax.lax.fori_loop(0, d // bm, mb_down, 0)
 
     # ---- 2. recompute the chunk forward against carry_before -------------
-    num = jnp.broadcast_to(m0_s[...], (gc, dv)) + jnp.dot(
+    # num: this block's Dv columns only; den: full (Dv-independent)
+    num = jnp.broadcast_to(m0_s[...], (gc, blk)) + jnp.dot(
         q, m1_s[...], preferred_element_type=f32)
     den = g0_s[0, 0] + jnp.dot(q, g1_s[0], preferred_element_type=f32)
     if p >= 2:
@@ -128,7 +150,7 @@ def _causal_bwd_kernel(
             return a + jnp.dot(y, z, preferred_element_type=f32)
 
         num = num + 0.5 * jax.lax.fori_loop(
-            0, d // bm, mb_num, jnp.zeros((gc, dv), f32))
+            0, d // bm, mb_num, jnp.zeros((gc, blk), f32))
 
     s_qk = jnp.dot(q, k.T, preferred_element_type=f32)   # [GC, C]
     qpos = jax.lax.broadcasted_iota(jnp.int32, (gc, cs), 0) % cs
@@ -139,17 +161,19 @@ def _causal_bwd_kernel(
     den = den + jnp.sum(fs, axis=-1)
 
     deni = 1.0 / (den + denom_eps)
-    o = num * deni[:, None]
-    u = do * deni[:, None]                 # dL/dnum
-    sden = -jnp.sum(o * u, axis=-1)        # dL/dden  [GC]
+    o = num * deni[:, None]                # this block's output columns
+    u = do * deni[:, None]                 # dL/dnum (block columns)
+    sden = -jnp.sum(o * u, axis=-1)        # block PARTIAL of dL/dden  [GC]
 
     # ---- 3a. intra-chunk grads through the f(QK^T) block ------------------
+    # ds decomposes additively over Dv blocks: u@v^T contracts only this
+    # block's columns and sden is the block partial, so Σ_blocks ds == full
     fprime = (1.0 + s_qk) if p >= 2 else jnp.ones_like(s_qk)
     ds = (jnp.dot(u, v.T, preferred_element_type=f32)
           + sden[:, None]) * fprime * mask
     dq = jnp.dot(ds, k, preferred_element_type=f32)      # [GC, D]
     dk = jnp.dot(ds.T, q, preferred_element_type=f32)    # [C, D]
-    dvv = jnp.dot(fs.T, u, preferred_element_type=f32)   # [C, Dv]
+    dvv = jnp.dot(fs.T, u, preferred_element_type=f32)   # [C, BLK]
 
     # ---- 3b. inter-chunk dq through the carry moments ---------------------
     dq += jnp.dot(u, m1_s[...].T, preferred_element_type=f32)
@@ -159,11 +183,11 @@ def _causal_bwd_kernel(
                                       preferred_element_type=f32)
 
         def mb_dq(i, a):
-            z = m2_s[pl.dslice(i * bm * d, bm * d), :]       # [bm*D, Dv]
+            z = m2_s[pl.dslice(i * bm * d, bm * d), :]       # [bm*D, BLK]
             tmp = jnp.dot(u, z.T, preferred_element_type=f32)
             tmp = tmp.reshape(gc, bm, d)
-            blk = jnp.sum(tmp * q[:, None, :], axis=-1)       # [GC, bm]
-            return jax.lax.dynamic_update_slice(a, blk, (0, i * bm))
+            blk_ = jnp.sum(tmp * q[:, None, :], axis=-1)      # [GC, bm]
+            return jax.lax.dynamic_update_slice(a, blk_, (0, i * bm))
 
         dq += jax.lax.fori_loop(0, d // bm, mb_dq,
                                 jnp.zeros((gc, d), f32))
@@ -172,7 +196,7 @@ def _causal_bwd_kernel(
     # cotangent accumulated from LATER chunks — before step 4 updates it) ---
     dk += w[:, None] * jnp.dot(v, gm1_s[...].T, preferred_element_type=f32)
     dk += w[:, None] * gg1_s[0][None, :]
-    dvv += w[:, None] * jnp.broadcast_to(gm0_s[...], (cs, dv))
+    dvv += w[:, None] * jnp.broadcast_to(gm0_s[...], (cs, blk))
     dvv += w[:, None] * jnp.dot(k, gm1_s[...], preferred_element_type=f32)
     if p >= 2:
         dk += 2.0 * w[:, None] * jnp.dot(k, gg2_s[...],
@@ -180,23 +204,25 @@ def _causal_bwd_kernel(
 
         def mb_dkv(i, carry):
             dk_a, dv_a = carry
-            z = gm2_s[pl.dslice(i * bm * d, bm * d), :]      # [bm*D, Dv]
+            z = gm2_s[pl.dslice(i * bm * d, bm * d), :]      # [bm*D, BLK]
             km = jax.lax.dynamic_slice_in_dim(k, i * bm, bm, 1)
             tt = (km[:, :, None] * k[:, None, :]).reshape(cs, bm * d)
             dv_a = dv_a + jnp.dot(tt, z, preferred_element_type=f32)
             tmp = jnp.dot(vw, z.T, preferred_element_type=f32)
             tmp = tmp.reshape(cs, bm, d)
-            blk = 2.0 * jnp.sum(tmp * k[:, None, :], axis=-1)  # [C, bm]
-            dk_a = jax.lax.dynamic_update_slice(dk_a, blk, (0, i * bm))
+            blk_ = 2.0 * jnp.sum(tmp * k[:, None, :], axis=-1)  # [C, bm]
+            dk_a = jax.lax.dynamic_update_slice(dk_a, blk_, (0, i * bm))
             return dk_a, dv_a
 
         dk2, dv2 = jax.lax.fori_loop(
             0, d // bm, mb_dkv,
-            (jnp.zeros((cs, d), f32), jnp.zeros((cs, dv), f32)))
+            (jnp.zeros((cs, d), f32), jnp.zeros((cs, blk), f32)))
         dk += dk2
         dvv += w[:, None] * dv2
 
     # ---- 4. fold this chunk's carry-cotangent for earlier chunks ----------
+    # the gg-moments accumulate the block-PARTIAL sden, so the dk terms
+    # they feed (step 3c) stay additively decomposed too
     gm0_s[...] += jnp.sum(u, axis=0, keepdims=True)
     gm1_s[...] += jnp.dot(q.T, u, preferred_element_type=f32)
     gg0_s[...] += jnp.sum(sden).reshape(1, 1)
@@ -214,14 +240,14 @@ def _causal_bwd_kernel(
 
         jax.lax.fori_loop(0, d // bm, mb_gm2, 0)
 
-    dq_ref[0] = dq.reshape(g, cs, d).astype(dq_ref.dtype)
-    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dq_ref[0, 0] = dq.reshape(g, cs, d).astype(dq_ref.dtype)
+    dk_ref[0, 0] = dk.astype(dk_ref.dtype)
     dv_ref[0] = dvv.astype(dv_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("p", "chunk_size", "denom_eps", "interpret"),
+    static_argnames=("p", "chunk_size", "denom_eps", "interpret", "blk"),
 )
 def fastmax_causal_bwd_pallas(
     q: jnp.ndarray,   # [B, Hq, N, D]   (pre-normalized q̂, as in the fwd)
@@ -235,8 +261,17 @@ def fastmax_causal_bwd_pallas(
     chunk_size: int = 128,
     denom_eps: float = 1e-6,
     interpret: bool = False,
+    blk: int | None = None,
 ):
-    """Returns (dq, dk, dv) in the input dtypes."""
+    """Returns (dq, dk, dv) in the input dtypes.
+
+    `blk` is the Dv carry-block width (must divide Dv); None picks the
+    largest divisor keeping BOTH degree-2 scratch tuples under
+    `BWD_BLK_BUDGET` each — nb = Dv/blk = 1 (the unblocked schedule) up to
+    64×64 heads, nb = 2 at 128×128. Feature-TP callers pass their LOCAL Dv
+    shard; the emitted dq/dk are then the shard's partials (psummed once
+    per launch by `repro.kernels.sharded`).
+    """
     b, hq, n, d = q.shape
     hkv = k.shape[1]
     dv = v.shape[-1]
@@ -270,56 +305,72 @@ def fastmax_causal_bwd_pallas(
     fg2 = g2.reshape(bh, d, d).astype(acc)
 
     bm = pick_bm(d)
+    if blk is None:
+        blk = pick_blk(d, dv, BWD_BLK_BUDGET)
+    if dv % blk:
+        raise ValueError(f"blk={blk} must divide Dv={dv}")
+    nb = dv // blk
     kernel = functools.partial(_causal_bwd_kernel, p=p, bm=bm,
                                denom_eps=denom_eps, acc=acc)
-    rev = lambda h, t: (h, nc - 1 - t, 0)       # noqa: E731 reverse chunks
-    revq = lambda h, t: (h, 0, nc - 1 - t, 0)   # noqa: E731
-    sm = lambda h, t: (h, 0, 0)                 # noqa: E731 constant blocks
-    dq, dk, dvv = pl.pallas_call(
+    rev = lambda h, b_, t: (h, nc - 1 - t, 0)        # noqa: E731 rev chunks
+    revb = lambda h, b_, t: (h, nc - 1 - t, b_)      # noqa: E731 + Dv block
+    revq = lambda h, b_, t: (h, 0, nc - 1 - t, 0)    # noqa: E731
+    revqb = lambda h, b_, t: (h, 0, nc - 1 - t, b_)  # noqa: E731
+    vb = lambda h, b_, t: (h, 0, b_)                 # noqa: E731 m-state
+    sm = lambda h, b_, t: (h, 0, 0)                  # noqa: E731 g-state
+    # dq/dk come back as per-Dv-block fp32 partials (leading nb axis) and
+    # are reduced here: every backward term is linear in the block-local
+    # cotangents, so the sum over blocks is the exact full gradient
+    dq_p, dk_p, dvv = pl.pallas_call(
         kernel,
-        grid=(bh, nc),
+        grid=(bh, nb, nc),
         in_specs=[
             pl.BlockSpec((1, g, cs, d), revq),
             pl.BlockSpec((1, cs, d), rev),
-            pl.BlockSpec((1, cs, dv), rev),
-            pl.BlockSpec((1, cs), lambda h, t: (h, nc - 1 - t)),
-            pl.BlockSpec((1, g, cs, dv), revq),
-            pl.BlockSpec((1, 1, dv), sm),
-            pl.BlockSpec((1, d, dv), sm),
-            pl.BlockSpec((1, m2_rows, dv), sm),
+            pl.BlockSpec((1, cs, blk), revb),
+            pl.BlockSpec((1, cs), lambda h, b_, t: (h, nc - 1 - t)),
+            pl.BlockSpec((1, g, cs, blk), revqb),
+            pl.BlockSpec((1, 1, blk), vb),
+            pl.BlockSpec((1, d, blk), vb),
+            pl.BlockSpec((1, m2_rows, blk), vb),
             pl.BlockSpec((1, 1, 1), sm),
             pl.BlockSpec((1, 1, d), sm),
             pl.BlockSpec((1, d, d), sm),
         ],
         out_specs=[
-            pl.BlockSpec((1, g, cs, d), revq),
-            pl.BlockSpec((1, cs, d), rev),
-            pl.BlockSpec((1, cs, dv), rev),
+            pl.BlockSpec((1, 1, g, cs, d),
+                         lambda h, b_, t: (h, b_, 0, nc - 1 - t, 0)),
+            pl.BlockSpec((1, 1, cs, d),
+                         lambda h, b_, t: (h, b_, nc - 1 - t, 0)),
+            pl.BlockSpec((1, cs, blk), revb),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((bh, g, nc * cs, d), q.dtype),
-            jax.ShapeDtypeStruct((bh, nc * cs, d), k.dtype),
+            jax.ShapeDtypeStruct((bh, nb, g, nc * cs, d), acc),
+            jax.ShapeDtypeStruct((bh, nb, nc * cs, d), acc),
             jax.ShapeDtypeStruct((bh, nc * cs, dv), v.dtype),
         ],
         scratch_shapes=[
-            pltpu.VMEM((1, dv), acc),
-            pltpu.VMEM((d, dv), acc),
-            pltpu.VMEM((m2_rows, dv), acc),
+            pltpu.VMEM((1, blk), acc),
+            pltpu.VMEM((d, blk), acc),
+            pltpu.VMEM((m2_rows, blk), acc),
             pltpu.VMEM((1, 1), acc),
             pltpu.VMEM((1, d), acc),
             pltpu.VMEM((d, d), acc),
-            pltpu.VMEM((1, dv), acc),
-            pltpu.VMEM((d, dv), acc),
-            pltpu.VMEM((m2_rows, dv), acc),
+            pltpu.VMEM((1, blk), acc),
+            pltpu.VMEM((d, blk), acc),
+            pltpu.VMEM((m2_rows, blk), acc),
             pltpu.VMEM((1, 1), acc),
             pltpu.VMEM((1, d), acc),
             pltpu.VMEM((d, d), acc),
         ],
-        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name=f"fastmax_causal_bwd_p{p}",
     )(qp, kp, vp, w, dop, fm0, fm1, fm2, fg0, fg1, fg2)
 
+    dq = jnp.sum(dq_p, axis=1).astype(q.dtype)
+    dk = jnp.sum(dk_p, axis=1).astype(k.dtype)
     dq = dq.reshape(b, hkv, g, nc * cs, d)[:, :, :, :n].reshape(b, hq, n, d)
     dk = dk.reshape(b, hkv, nc * cs, d)[:, :, :n]
     dvv = dvv.reshape(b, hkv, nc * cs, dv)[:, :, :n]

@@ -29,7 +29,7 @@ from repro.kernels.fastmax_decode import fastmax_decode_pallas
 from repro.kernels.fastmax_noncausal import fastmax_noncausal_pallas
 
 __all__ = ["fastmax", "fastmax_prefill_kernel", "fastmax_decode",
-           "use_interpret", "use_pallas_bwd"]
+           "fastmax_bwd", "use_interpret", "use_pallas_bwd"]
 
 
 def use_interpret() -> bool:
@@ -66,16 +66,38 @@ def _fc_fwd(q, k, v, p, chunk_size, denom_eps, interpret):
 
 def _fc_bwd(p, chunk_size, denom_eps, interpret, res, do):
     q, k, v, state = res
+    return fastmax_bwd(q, k, v, state, do, p=p, chunk_size=chunk_size,
+                       denom_eps=denom_eps, interpret=interpret)
+
+
+def fastmax_bwd(q, k, v, state, do, *, p: int = 2, chunk_size: int = 128,
+                denom_eps: float = 1e-6, interpret: bool | None = None):
+    """Causal fastmax backward on the kernel-emitted final carry.
+
+    Returns (dq, dk, dv). The Dv-blocked fused Pallas kernel by default;
+    REPRO_FASTMAX_BWD=jnp reroutes to the jnp §2.5 chunked reverse scan
+    (the equivalence oracle and escape hatch). `state` may carry None for
+    m2 at p < 2 (the custom_vjp residual drops the zeros placeholder).
+
+    Also the per-shard backward of the feature-TP trainable path
+    (`repro.kernels.sharded`): on a Dv shard of (v, do, m-moments) with the
+    full g-moments, every emitted dq/dk term is the shard's exact partial
+    (the same additive-over-Dv decomposition the in-kernel blocking uses),
+    so one psum per launch reassembles the full gradients — and that holds
+    for BOTH backends here, keeping the jnp oracle comparable shard-local.
+    """
+    if interpret is None:
+        interpret = use_interpret()
     if use_pallas_bwd():
         return fastmax_causal_bwd_pallas(
             q, k, v, state, do, p=p, chunk_size=chunk_size,
             denom_eps=denom_eps, interpret=interpret)
     # jnp oracle: the §2.5 chunked reverse scan on the same kernel-emitted
     # carry (kept for equivalence testing and as an escape hatch)
-    if p < 2:
+    if state[2] is None or p < 2:
         d, dv = q.shape[-1], v.shape[-1]
         m2 = jnp.zeros(k.shape[:2] + (d, d, dv), state[0].dtype)
-        state = state[:2] + (m2,) + state[3:]
+        state = tuple(state[:2]) + (m2,) + tuple(state[3:])
     return _fm._causal_scan_cg_bwd(p, chunk_size, denom_eps, False,
                                    (q, k, v, _fm.Moments(*state)), do)
 

@@ -17,12 +17,19 @@ kernel body on its shard, with the partitioning chosen once per call site:
                 the scalar g-moments replicated across "model". Each device
                 folds the token into ITS Dv-slice of (m0, m1, m2) and
                 redundantly maintains the tiny g-moments, so the numerator
-                splits tp-ways and the denominator is exact locally — again
-                zero collectives inside the wrapper. Supported for the
-                inference kernels (prefill forward + decode); the fused
-                backward contracts over the full Dv per chunk, so training
-                under feature-TP stays on the sharding-aware jnp scan
-                (repro.core.fastmax, see `attention/backends.py`).
+                splits tp-ways and the denominator is exact locally — zero
+                collectives inside the inference wrappers (prefill forward
+                + decode). TRAINING runs feature-TP too: the Dv-blocked
+                fused backward decomposes additively over value-feature
+                columns (every dq/dk term is linear in the block-local
+                output cotangent and its denominator partial), so each
+                device launches the blocked backward on its Dv shard and
+                the wrapper psums the partial dq/dk ONCE per launch — the
+                only collectives in the trainable path, off the per-chunk
+                critical path (mathematically equal to psumming the score
+                cotangent ds inside the chunk loop, without serializing a
+                collective per chunk). The jnp chunked scan remains the
+                REPRO_FASTMAX_BWD=jnp oracle (`attention/backends.py`).
 
 The group alignment heads mode relies on: q heads are grouped contiguously
 ([B, Hkv, G, ...] reshape), so a "model" shard of Hq = G·Hkv heads is
@@ -35,8 +42,10 @@ kernel call) from "mesh but unpartitionable".
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional
 
+import jax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
@@ -123,32 +132,114 @@ def _moment_specs(plan: ShardPlan):
 
 def fastmax_sharded(q, k, v, *, p: int, causal: bool, chunk_size: int,
                     denom_eps: float, plan: ShardPlan):
-    """shard_map-wrapped TRAINABLE kernel attention (heads mode only).
+    """shard_map-wrapped TRAINABLE kernel attention.
 
-    Differentiable: autodiff of the shard_map applies the per-shard
-    custom_vjp, so the fused Pallas backward runs shard-local too.
+    heads mode: autodiff of the shard_map applies the per-shard custom_vjp,
+    so the fused Pallas backward runs shard-local per (batch, kv-head) with
+    zero collectives. feature mode (causal only): the Dv-blocked kernels
+    run per value-feature shard through an explicit custom_vjp — forward
+    emits the Dv-sharded outputs + moment carry collective-free, backward
+    launches the blocked kernel on each shard's (v, do, m-moments) slice
+    and psums the partial dq/dk once per launch (see module docstring).
     """
-    if plan.mode != "heads":
+    if plan.mode == "heads":
+        from repro.kernels import ops as kernel_ops
+
+        ba, h = plan.batch, plan.head
+        qkv_spec = P(ba, h, None, None)
+
+        def body(q, k, v):
+            return kernel_ops.fastmax(q, k, v, p=p, causal=causal,
+                                      chunk_size=chunk_size,
+                                      denom_eps=denom_eps)
+
+        return shard_map(
+            body, mesh=plan.mesh,
+            in_specs=(qkv_spec, qkv_spec, qkv_spec),
+            out_specs=P(ba, h, None, None),
+            check_rep=False,
+        )(q, k, v)
+    if not causal:
         raise ValueError(
-            "trainable kernel shard_map supports heads mode only; "
-            f"got {plan.mode!r} (route feature-TP training to the chunked "
-            "scan)")
+            "feature-mode trainable shard_map is causal-only; route "
+            "noncausal feature-TP attention to the chunked scan")
+    return _feature_trainable(q, k, v, p, chunk_size, denom_eps, plan)
+
+
+def _feature_fwd_launch(q, k, v, p, chunk_size, denom_eps, plan):
+    """Forward launch of the feature-mode trainable: (o, final carry).
+
+    One shard_map of the state-emitting causal kernel: v and the emitted
+    m-moments/outputs Dv-sharded, q/k and the g-moments replicated — the
+    same zero-collective partitioning as `fastmax_prefill_sharded`, reused
+    here so the custom_vjp residual is the kernel-emitted carry (no second
+    pass) already in the layout the per-shard backward consumes.
+    """
     from repro.kernels import ops as kernel_ops
 
-    ba, h = plan.batch, plan.head
-    qkv_spec = P(ba, h, None, None)
+    ba, f = plan.batch, plan.feat
+    rep4 = P(ba, None, None, None)
 
     def body(q, k, v):
-        return kernel_ops.fastmax(q, k, v, p=p, causal=causal,
-                                  chunk_size=chunk_size,
-                                  denom_eps=denom_eps)
+        return kernel_ops.fastmax_prefill_kernel(
+            q, k, v, p=p, chunk_size=chunk_size, denom_eps=denom_eps)
 
     return shard_map(
         body, mesh=plan.mesh,
-        in_specs=(qkv_spec, qkv_spec, qkv_spec),
-        out_specs=P(ba, h, None, None),
+        in_specs=(rep4, rep4, P(ba, None, None, f)),
+        out_specs=(P(ba, None, None, f), _moment_specs(plan)),
         check_rep=False,
     )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _feature_trainable(q, k, v, p, chunk_size, denom_eps, plan):
+    o, _ = _feature_fwd_launch(q, k, v, p, chunk_size, denom_eps, plan)
+    return o
+
+
+def _ft_fwd(q, k, v, p, chunk_size, denom_eps, plan):
+    o, state = _feature_fwd_launch(q, k, v, p, chunk_size, denom_eps, plan)
+    if p < 2:
+        # don't hold the [B,Hkv,D,D,Dv] zeros placeholder live as a residual
+        state = state[:2] + (None,) + state[3:]
+    return o, (q, k, v, tuple(state))
+
+
+def _ft_bwd(p, chunk_size, denom_eps, plan, res, do):
+    q, k, v, state = res
+    if state[2] is None:
+        import jax.numpy as jnp
+        d, dv = q.shape[-1], v.shape[-1]
+        state = state[:2] + (jnp.zeros(k.shape[:2] + (d, d, dv),
+                                       state[0].dtype),) + state[3:]
+    from repro.kernels import ops as kernel_ops
+
+    ba, f = plan.batch, plan.feat
+    rep4 = P(ba, None, None, None)
+    mspecs = _moment_specs(plan)
+
+    def body(q, k, v, do, *state):
+        # the local launch sees the shard's Dv slice of (v, do, m-moments)
+        # and the full g-moments: its dq/dk are the shard's exact partials
+        # (fastmax_bwd docstring), its dv the shard's exact slice
+        dq, dk, dv = kernel_ops.fastmax_bwd(
+            q, k, v, tuple(state), do, p=p, chunk_size=chunk_size,
+            denom_eps=denom_eps)
+        dq = jax.lax.psum(dq, "model")
+        dk = jax.lax.psum(dk, "model")
+        return dq, dk, dv
+
+    return shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(rep4, rep4, P(ba, None, None, f), P(ba, None, None, f),
+                  *mspecs),
+        out_specs=(rep4, rep4, P(ba, None, None, f)),
+        check_rep=False,
+    )(q, k, v, do, *state)
+
+
+_feature_trainable.defvjp(_ft_fwd, _ft_bwd)
 
 
 def fastmax_prefill_sharded(q, k, v, *, p: int, chunk_size: int,

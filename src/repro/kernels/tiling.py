@@ -1,21 +1,42 @@
 """Shared tiling policy for the fastmax m-blocked degree-2 contractions.
 
-Both the jnp chunked scan (`repro.core.fastmax`) and the Pallas kernels
-block the degree-2 moment over its first index so the working tile is
-[bm*D, Dv] and the per-step intermediates are [*, bm*D]. The block size is
-the largest divisor of D whose flattened row count bm*D stays under a
-budget: ~512 rows for VMEM-resident kernel tiles (MXU-friendly inner
-matmuls), ~2048 for the XLA scan path (bounds the [..., N, bm*D]
-intermediate that the naive einsum would blow up to [..., N, D, Dv]).
+Two independent blockings of the degree-2 moment `m2 [D·D, Dv]` (m-major):
+
+* `pick_bm` — the ROW (first-moment-index) streaming block. Both the jnp
+  chunked scan (`repro.core.fastmax`) and the Pallas kernels slice the
+  working tile to [bm*D, Dv] so the per-step intermediates are [*, bm*D].
+  bm is the largest divisor of D whose flattened row count bm*D stays
+  under a budget: ~512 rows for VMEM-resident kernel tiles (MXU-friendly
+  inner matmuls), ~2048 for the XLA scan path (bounds the [..., N, bm*D]
+  intermediate that the naive einsum would blow up to [..., N, D, Dv]).
+
+* `pick_blk` — the COLUMN (value-feature, Dv) carry block. The causal
+  forward/backward kernels hold the RUNNING moment carry in VMEM scratch;
+  at D = Dv = 128 a full degree-2 tuple is D²·Dv·4 = 8 MB, and the fused
+  backward needs TWO (carry + carry-cotangent) — past the ~16 MB/core
+  VMEM wall. Both kernels therefore tile the Dv axis of the carry into
+  `nb = Dv/blk` independent column blocks (a grid axis): per-block scratch
+  is D²·blk·4 bytes, the chunk forward is recomputed once per block from
+  the reversible carry, and every emitted quantity either slices (o, dv,
+  the m-moments) or sums (dq, dk — the contractions over Dv are linear in
+  the per-block cotangents) across blocks. blk is the largest divisor of
+  Dv with D²·blk at most the budget: 2M f32 words (8 MB) for the forward's
+  single tuple, 1M (4 MB each, 8 MB for the pair) for the backward — so
+  128×128 heads train with nb_fwd = 1, nb_bwd = 2, and small heads keep
+  nb = 1 (the unblocked schedule, bit-identical to before).
 """
 from __future__ import annotations
 
 import functools
 
-__all__ = ["pick_bm", "KERNEL_BM_BUDGET", "SCAN_BM_BUDGET"]
+__all__ = ["pick_bm", "pick_blk", "KERNEL_BM_BUDGET", "SCAN_BM_BUDGET",
+           "FWD_BLK_BUDGET", "BWD_BLK_BUDGET"]
 
 KERNEL_BM_BUDGET = 512   # Pallas VMEM tiles
 SCAN_BM_BUDGET = 2048    # jnp chunked-scan intermediates
+
+FWD_BLK_BUDGET = 2 << 20   # f32 words per degree-2 carry tuple (1 tuple)
+BWD_BLK_BUDGET = 1 << 20   # f32 words per tuple (carry + cotangent pair)
 
 
 @functools.lru_cache(maxsize=None)
@@ -25,4 +46,19 @@ def pick_bm(d: int, budget: int = KERNEL_BM_BUDGET) -> int:
     for bm in range(1, d + 1):
         if d % bm == 0 and bm * d <= budget:
             best = bm
+    return best
+
+
+@functools.lru_cache(maxsize=None)
+def pick_blk(d: int, dv: int, budget: int = FWD_BLK_BUDGET) -> int:
+    """Largest divisor of `dv` with d*d*blk <= budget (always >= 1).
+
+    The Dv carry-block of the causal kernels: one degree-2 scratch tuple
+    is d*d*blk f32 words per grid program. blk == dv means nb == 1 — the
+    unblocked schedule.
+    """
+    best = 1
+    for blk in range(1, dv + 1):
+        if dv % blk == 0 and d * d * blk <= budget:
+            best = blk
     return best

@@ -358,17 +358,22 @@ def main():
                             f"{n_remat} involuntary full "
                             f"rematerialization warning(s)")
                     routing = res.get("attn_routing", [])
-                    jnp_falls = [ln for ln in routing
-                                 if "decode:" in ln and "-> jnp" in ln]
+                    # fallback lines: the decode protocol's "-> jnp" moment
+                    # step AND the trainable path's "-> chunked scan"
+                    # (feature-TP training must stay on the shard_map
+                    # Pallas kernels); the benign "-> interpret mode"
+                    # platform note is not a fallback
+                    falls = [ln for ln in routing
+                             if "-> jnp" in ln or "-> chunked scan" in ln]
                     routed = any("kernel shard_map[" in ln
                                  for ln in routing)
                     if args.assert_kernel_route and status == "OK":
                         # require the POSITIVE shard_map routing line too —
                         # an empty/disabled routing record must not pass
                         # the gate vacuously
-                        if jnp_falls:
-                            gate_errs.append("decode fell back to the jnp "
-                                             "moment step: " + jnp_falls[0])
+                        if falls:
+                            gate_errs.append("attention fell back off the "
+                                             "kernels: " + falls[0])
                         elif not routed:
                             gate_errs.append(
                                 "no shard_map kernel routing line recorded "

@@ -282,8 +282,11 @@ _MOMENT_NDIM = {"m0": 3, "m1": 4, "m2": 5, "g0": 2, "g1": 3, "g2": 4}
 
 def _moments_shardings(mom, mesh: Mesh):
     """Shardings of a Moments(-shaped) state: the SAME partitioning the
-    shard_map-wrapped kernels use (repro.kernels.sharded), so the committed
-    inter-step layout and the kernel launch agree with zero resharding:
+    shard_map-wrapped kernels use (repro.kernels.sharded) — for decode,
+    prefill, AND the feature-TP trainable custom_vjp residual (the
+    Dv-blocked backward consumes the carry in exactly this layout) — so
+    the committed inter-step layout and every kernel launch agree with
+    zero resharding:
 
       heads mode    (Hkv % tp == 0): kv-head dim over 'model';
       feature mode  (else, Dv % tp == 0): value-feature (last) dim of

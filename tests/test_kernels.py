@@ -149,6 +149,69 @@ def test_pallas_bwd_low_precision_vs_oracle_autodiff(dtype, tol, p):
         assert rel <= tol, f"rel err {rel} > {tol}"
 
 
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 5e-2)])
+def test_blocked_bwd_128x128_parity(monkeypatch, dtype, tol):
+    """The tentpole shape: D = Dv = 128, p = 2, GQA. The auto-picked Dv
+    carry block is < Dv (nb = 2 — the blocked schedule, two [D², 64]
+    scratch tuples instead of two [D², 128]), and the blocked fused
+    backward matches the jnp §2.5 reverse-scan oracle on the SAME
+    kernel-emitted residual."""
+    from repro.kernels import ops
+    from repro.kernels.tiling import BWD_BLK_BUDGET, pick_blk
+
+    d = dv = 128
+    assert pick_blk(d, dv, BWD_BLK_BUDGET) < dv  # blocked path exercised
+    rng = np.random.default_rng(41)
+    q, k, v = mk(rng, 1, 2, 1, 64, d, dv, dtype)
+    do = jnp.asarray(rng.normal(size=(1, 2, 64, dv)), dtype)
+    _, res = ops._fc_fwd(q, k, v, 2, 32, 1e-6, True)
+    assert ops.use_pallas_bwd()
+    g_pallas = ops._fc_bwd(2, 32, 1e-6, True, res, do)
+    monkeypatch.setenv("REPRO_FASTMAX_BWD", "jnp")
+    g_jnp = ops._fc_bwd(2, 32, 1e-6, True, res, do)
+    for a, b in zip(g_pallas, g_jnp):
+        a = np.asarray(a, np.float64)
+        b = np.asarray(b, np.float64)
+        rel = np.abs(a - b).max() / max(np.abs(b).max(), 1e-6)
+        assert rel <= tol, f"rel err {rel} > {tol}"
+
+
+@pytest.mark.parametrize("p", [1, 2])
+def test_forced_blocking_matches_unblocked(p):
+    """Forcing small Dv carry blocks (nb in {2, 4, 8}) reproduces the
+    unblocked (blk = Dv) forward outputs, emitted carry, and backward
+    cotangents — the additive-over-Dv decomposition is exact, f64."""
+    from repro.kernels.fastmax_causal import fastmax_causal_pallas
+    from repro.kernels.fastmax_causal_bwd import fastmax_causal_bwd_pallas
+
+    rng = np.random.default_rng(43 + p)
+    b, hq, hkv, n, d, dv = 1, 4, 2, 33, 8, 16
+    q, k, v = mk(rng, b, hq, hkv, n, d, dv, jnp.float64)
+    do = jnp.asarray(rng.normal(size=(b, hq, n, dv)), jnp.float64)
+    o_ref, st_ref = fastmax_causal_pallas(
+        q, k, v, p=p, chunk_size=16, interpret=True, return_state=True,
+        blk=dv)
+    g_ref = fastmax_causal_bwd_pallas(
+        q, k, v, tuple(st_ref), do, p=p, chunk_size=16, interpret=True,
+        blk=dv)
+    for blk in (8, 4, 2):
+        o_b, st_b = fastmax_causal_pallas(
+            q, k, v, p=p, chunk_size=16, interpret=True, return_state=True,
+            blk=blk)
+        np.testing.assert_allclose(np.asarray(o_b), np.asarray(o_ref),
+                                   rtol=1e-12, atol=1e-12)
+        for a, bb in zip(st_b, st_ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                       rtol=1e-12, atol=1e-12)
+        g_b = fastmax_causal_bwd_pallas(
+            q, k, v, tuple(st_ref), do, p=p, chunk_size=16, interpret=True,
+            blk=blk)
+        for a, bb in zip(g_b, g_ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                       rtol=1e-11, atol=1e-12)
+
+
 def test_jnp_bwd_oracle_stays_wired(monkeypatch):
     """REPRO_FASTMAX_BWD=jnp reroutes the custom_vjp backward rule to the
     jnp §2.5 reverse scan (the interpret-mode oracle escape hatch); both

@@ -12,11 +12,15 @@ Covered:
     partitionings (heads mode, feature mode), p ∈ {1,2}, GQA;
   * 256-step decode: the shard_map fused decode kernel stays in lockstep
     with the single-device kernel;
-  * backward parity of the shard_map trainable kernel (fused Pallas bwd
-    applied per shard) vs the single-device kernel and vs the
-    REPRO_FASTMAX_BWD=jnp §2.5 oracle, f64/f32/bf16;
+  * backward parity of the shard_map trainable kernel vs the single-device
+    kernel and vs the REPRO_FASTMAX_BWD=jnp §2.5 oracle, f64/f32/bf16 —
+    heads mode (fused Pallas bwd applied per kv-head shard) AND feature
+    mode (Dv-blocked bwd per value-feature shard, partial dq/dk psummed
+    once per launch), including the end-to-end attention() routing proof
+    that feature-TP training lands on shard_map[feature];
   * grad equivalence of the feature-TP sharding-aware chunked scan on a
-    train-shaped toy vs the unsharded jnp oracle, f32/bf16;
+    train-shaped toy vs the unsharded jnp oracle, f32/bf16 (kept on the
+    scan path via REPRO_FASTMAX_BWD=jnp — the kernel-route escape hatch);
   * the decode-state sharding policy (moments + KV cache) matches the
     kernel ShardPlan partitioning.
 """
@@ -192,6 +196,86 @@ def test_sharded_kernel_grads_vs_jnp_oracle(shard_devices, monkeypatch,
         assert rel <= tol, f"rel err {rel} > {tol}"
 
 
+@pytest.mark.parametrize("p", [1, 2])
+def test_sharded_feature_trainable_backward_matches_single_device(
+        shard_devices, p):
+    """Feature mode TRAINING: grads through the shard_map trainable kernel
+    (Dv-blocked fused backward per value-feature shard, one psum of the
+    partial dq/dk per launch) == grads through the single-device kernel,
+    f64."""
+    from repro.kernels.ops import fastmax
+    from repro.kernels.sharded import fastmax_sharded
+
+    cfgm = MODES["feature"]
+    rng = np.random.default_rng(hash(("feat-bwd", p)) % 2**31)
+    q, k, v = mk(rng, 4, cfgm["hq"], cfgm["hkv"], 33, 4, 8, jnp.float64)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.sin(fastmax(q, k, v, p=p, causal=True,
+                                       chunk_size=16)))
+
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+
+    mesh = _mesh(cfgm["mesh"])
+    with mesh:
+        plan = _plan_for(mesh, q, k, v)
+        assert plan.mode == "feature"
+
+        def loss_sh(q, k, v):
+            return jnp.sum(jnp.sin(fastmax_sharded(
+                q, k, v, p=p, causal=True, chunk_size=16, denom_eps=1e-6,
+                plan=plan)))
+
+        o_sh = fastmax_sharded(q, k, v, p=p, causal=True, chunk_size=16,
+                               denom_eps=1e-6, plan=plan)
+        o_ref = fastmax(q, k, v, p=p, causal=True, chunk_size=16)
+        np.testing.assert_allclose(np.asarray(o_sh), np.asarray(o_ref),
+                                   rtol=1e-12, atol=1e-12)
+        g_sh = jax.grad(loss_sh, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_sh, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-10, atol=1e-11)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 5e-2)])
+def test_feature_tp_training_routes_to_sharded_kernel(shard_devices,
+                                                      monkeypatch, dtype,
+                                                      tol):
+    """End to end through attention(): feature-TP TRAINING (kv heads don't
+    divide 'model') now routes to the shard_map[feature] Dv-blocked
+    kernels — the routing log proves it (no chunked-scan fallback) — and
+    the grads match the unsharded REPRO_FASTMAX_BWD=jnp §2.5 oracle."""
+    from repro.attention import AttentionSpec, attention
+    from repro.attention import registry as _reg
+
+    spec = AttentionSpec(family="fastmax", p=2, impl="kernel", chunk_size=16)
+    rng = np.random.default_rng(37)
+    q, k, v = mk(rng, 4, 4, 2, 64, 4, 8, dtype)
+
+    monkeypatch.setenv("REPRO_FASTMAX_BWD", "jnp")
+
+    def loss(q, k, v):
+        return jnp.sum(attention(q, k, v, spec, causal=True))
+
+    g_ref = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    monkeypatch.delenv("REPRO_FASTMAX_BWD")
+
+    mesh = _mesh((2, 4))
+    with mesh:
+        _reg._LOGGED.clear()   # _log_once dedups across tests
+        g_sh = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+        new_logs = set(_reg._LOGGED)
+    assert any("shard_map[feature]" in m for m in new_logs), new_logs
+    assert not any("-> chunked scan" in m or "-> jnp" in m
+                   for m in new_logs), new_logs
+    for a, b in zip(g_sh, g_ref):
+        a = np.asarray(a, np.float64)
+        b = np.asarray(b, np.float64)
+        rel = np.abs(a - b).max() / max(np.abs(b).max(), 1e-6)
+        assert rel <= tol, f"rel err {rel} > {tol}"
+
+
 @pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
                                        (jnp.bfloat16, 5e-2)])
 def test_feature_tp_scan_grads_match_unsharded_oracle(shard_devices,
@@ -200,7 +284,11 @@ def test_feature_tp_scan_grads_match_unsharded_oracle(shard_devices,
     """Satellite: the sharding-aware chunked scan under a feature-TP mesh
     (kv heads don't divide 'model'; stacked chunks pinned, carry
     constrained) produces the same grads as the unsharded jnp oracle
-    (REPRO_FASTMAX_BWD=jnp) on a train-shaped toy."""
+    on a train-shaped toy. REPRO_FASTMAX_BWD=jnp stays set for the mesh
+    eval too: since the Dv-blocked backward landed, that env var is what
+    keeps feature-TP training on the scan path (the default routes to the
+    shard_map[feature] kernels — covered by
+    test_feature_tp_training_routes_to_sharded_kernel)."""
     from repro.attention import AttentionSpec, attention
 
     spec = AttentionSpec(family="fastmax", p=2, impl="kernel", chunk_size=16)
@@ -214,13 +302,16 @@ def test_feature_tp_scan_grads_match_unsharded_oracle(shard_devices,
         return jnp.sum(attention(q, k, v, spec, causal=True))
 
     g_ref = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
-    monkeypatch.delenv("REPRO_FASTMAX_BWD")
 
     mesh = _mesh((2, 4))
     with mesh:
         from repro.attention.api import feature_shard_flag
+        from repro.attention import registry as _reg
         assert feature_shard_flag(k.shape[1])  # 2 % 4 != 0 -> feature-TP
+        _reg._LOGGED.clear()   # _log_once dedups across tests
         g_sh = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+        # the env var must have kept this on the scan path
+        assert any("-> chunked scan" in m for m in set(_reg._LOGGED))
     for a, b in zip(g_sh, g_ref):
         a = np.asarray(a, np.float64)
         b = np.asarray(b, np.float64)
