@@ -194,8 +194,25 @@ def _feature_fwd_launch(q, k, v, p, chunk_size, denom_eps, plan):
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def _feature_trainable(q, k, v, p, chunk_size, denom_eps, plan):
-    o, _ = _feature_fwd_launch(q, k, v, p, chunk_size, denom_eps, plan)
-    return o
+    # primal (non-differentiated calls): the STATELESS kernel — no carry
+    # DMA'd to HBM and the forward's nb grid axis stays parallel; only the
+    # vjp forward below pays for state emission (it IS the residual)
+    from repro.kernels import ops as kernel_ops
+
+    ba, f = plan.batch, plan.feat
+    rep4 = P(ba, None, None, None)
+
+    def body(q, k, v):
+        return kernel_ops.fastmax(q, k, v, p=p, causal=True,
+                                  chunk_size=chunk_size,
+                                  denom_eps=denom_eps)
+
+    return shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(rep4, rep4, P(ba, None, None, f)),
+        out_specs=P(ba, None, None, f),
+        check_rep=False,
+    )(q, k, v)
 
 
 def _ft_fwd(q, k, v, p, chunk_size, denom_eps, plan):
@@ -208,18 +225,22 @@ def _ft_fwd(q, k, v, p, chunk_size, denom_eps, plan):
 
 def _ft_bwd(p, chunk_size, denom_eps, plan, res, do):
     q, k, v, state = res
-    if state[2] is None:
-        import jax.numpy as jnp
-        d, dv = q.shape[-1], v.shape[-1]
-        state = state[:2] + (jnp.zeros(k.shape[:2] + (d, d, dv),
-                                       state[0].dtype),) + state[3:]
     from repro.kernels import ops as kernel_ops
 
     ba, f = plan.batch, plan.feat
     rep4 = P(ba, None, None, None)
     mspecs = _moment_specs(plan)
+    # p < 2: the residual dropped the m2 zeros placeholder — don't rebuild
+    # it at global size just to shard it in; pass the 5 live leaves and let
+    # fastmax_bwd handle the None (the Pallas kernel never reads m2 at
+    # p < 2, the jnp-oracle branch rebuilds shard-local zeros itself)
+    no_m2 = state[2] is None
+    if no_m2:
+        state, mspecs = state[:2] + state[3:], mspecs[:2] + mspecs[3:]
 
     def body(q, k, v, do, *state):
+        if no_m2:
+            state = state[:2] + (None,) + state[2:]
         # the local launch sees the shard's Dv slice of (v, do, m-moments)
         # and the full g-moments: its dq/dk are the shard's exact partials
         # (fastmax_bwd docstring), its dv the shard's exact slice

@@ -129,6 +129,10 @@ def test_shard_map_parity_tier_subprocess():
      "fastmax2-kernel", "--assert-no-remat", "--assert-kernel-route"],
     # feature-TP scan constraints on the training path stay remat-free
     ["--arch", "qwen2.5-32b", "--shape", "train_4k", "--assert-no-remat"],
+    # feature-TP TRAINING routes to the shard_map[feature] Dv-blocked
+    # kernels (no chunked-scan fallback), remat-clean
+    ["--arch", "qwen2.5-32b", "--shape", "train_4k", "--attn",
+     "fastmax2-kernel", "--assert-no-remat", "--assert-kernel-route"],
 ])
 def test_dryrun_sharding_health_gates(cell, tmp_path):
     """Regression gates over the dryrun's machine-checkable diagnostics
