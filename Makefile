@@ -1,7 +1,7 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-attention test-kernels test-shard dryrun-gate \
-	bench bench-json ci-fast
+.PHONY: test test-fast test-attention test-kernels test-shard test-serve \
+	dryrun-gate bench bench-json bench-serve ci-fast
 
 # full tier-1 suite (everything, incl. multi-minute subprocess compiles)
 test:
@@ -22,6 +22,12 @@ test-attention:
 # just the Pallas kernel validation (fwd/bwd/decode interpret equivalence)
 test-kernels:
 	$(PY) -m pytest -q -m "kernels and not slow"
+
+# continuous-batching engine tier: slot pool, scheduler, prefix cache, and
+# engine-vs-generate() token parity for every decode-capable backend (the
+# slow-marked SSM-arch parity sweeps still run under `test`)
+test-serve:
+	$(PY) -m pytest -q -m "serve and not slow"
 
 # multi-device tier: shard_map kernel parity + feature-TP scan grads on 8
 # forced host CPU devices (no TPU required; conftest injects XLA_FLAGS)
@@ -46,8 +52,8 @@ dryrun-gate:
 		--attn softmax --assert-no-remat --out results/dryrun-gate
 
 # mirror the CI PR job locally (`.github/workflows/ci.yml` fast tier):
-# the three suites a PR must keep green, in the same order
-ci-fast: test-fast test-kernels test-shard
+# the four suites a PR must keep green, in the same order
+ci-fast: test-fast test-kernels test-shard test-serve
 
 bench:
 	$(PY) -m benchmarks.run --quick
@@ -56,3 +62,9 @@ bench:
 # baseline); prints a fail-soft warning when >20% slower than the baseline
 bench-json:
 	$(PY) -m benchmarks.run --only attn_phases --json BENCH_attention.json
+
+# serving load generator (Poisson arrivals, TTFT/TPOT percentiles,
+# saturation tok/s) -> BENCH_serve.json, the committed serving baseline;
+# prints the same fail-soft >20% regression summary as bench-json
+bench-serve:
+	$(PY) -m benchmarks.serve_load --json BENCH_serve.json

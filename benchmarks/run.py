@@ -61,7 +61,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,table2,fig6,fig2,"
-                         "table1,fig4,attn_phases")
+                         "table1,fig4,attn_phases,serve")
     ap.add_argument("--json", nargs="?", const="BENCH_attention.json",
                     default=None, metavar="PATH",
                     help="run the attention phase suite and write its "
@@ -72,8 +72,8 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (attention_phases, fig2_dropout, fig3_scaling,
-                            fig4_attnmap, fig6_loss, table1_lra_lite,
-                            table2_throughput)
+                            fig4_attnmap, fig6_loss, serve_load,
+                            table1_lra_lite, table2_throughput)
 
     suites = {
         "fig3": fig3_scaling.run,
@@ -83,6 +83,7 @@ def main() -> None:
         "table1": table1_lra_lite.run,
         "fig4": fig4_attnmap.run,
         "attn_phases": attention_phases.run,
+        "serve": serve_load.run,
     }
     if args.only:
         keep = set(args.only.split(","))

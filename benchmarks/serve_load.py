@@ -1,0 +1,179 @@
+"""Serving load generator: continuous batching under Poisson arrivals.
+
+Drives `repro.serve.ServeEngine` with an open-loop workload — Poisson
+inter-arrivals (in engine ticks, so runs are deterministic) over a mixture
+of prompt lengths — and reports the serving numbers that matter:
+
+  ttft_p50_us / ttft_p95_us   submit -> first token
+  tpot_p50_us / tpot_p95_us   per-request mean time per output token
+                              (decode portion: (latency - ttft) / (n - 1))
+  saturation_tok_s            generated tokens / wall time for the run
+  slot_bytes / slot_bytes_4k  per-sequence decode-state bytes at the bench
+                              max_len and at a 4k context — CONSTANT for
+                              fastmax cells, linear for the softmax-KV
+                              baseline (the paper's serving asymmetry)
+
+Cells: softmax-KV baseline, fastmax2-chunked, fastmax2-kernel. Off-TPU the
+kernel cell routes decode to the jnp moment fallback and is labeled
+`interpret` (not comparable across platforms), matching attention_phases.
+
+JSON results follow the benchmarks/run.py conventions and are committed as
+``BENCH_serve.json``; re-runs print the fail-soft >20% regression summary.
+
+  PYTHONPATH=src python -m benchmarks.serve_load --json BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+
+BACKENDS = ("softmax", "fastmax2-chunked", "fastmax2-kernel")
+
+
+def _workload(quick: bool):
+    if quick:
+        return dict(arch="qwen3-1.7b", n_requests=10, gen=8,
+                    prompt_mix=(12, 24, 40), max_len=64, slots=4,
+                    mean_interarrival_ticks=2.0)
+    return dict(arch="qwen3-1.7b", n_requests=32, gen=32,
+                prompt_mix=(64, 128, 256), max_len=512, slots=8,
+                mean_interarrival_ticks=4.0)
+
+
+def _bench_backend(spec_name: str, w: dict, *, seed: int = 0) -> dict:
+    import jax
+
+    from repro.attention import AttentionSpec
+    from repro.configs import get_smoke_config
+    from repro.core.decode_state import decode_state_bytes
+    from repro.models import init_model
+    from repro.serve import ServeEngine
+
+    cfg = get_smoke_config(w["arch"])
+    cfg = dataclasses.replace(cfg, attn=AttentionSpec.parse(spec_name))
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            rng.choice(w["prompt_mix"])).astype(np.int32)
+               for _ in range(w["n_requests"])]
+    gaps = rng.exponential(w["mean_interarrival_ticks"], w["n_requests"])
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+
+    eng = ServeEngine(params, cfg, max_slots=w["slots"],
+                      max_len=w["max_len"])
+
+    def drive():
+        """Open-loop run: request i is admitted once the engine reaches its
+        arrival tick (Poisson in tick-time, so runs are deterministic)."""
+        start = eng.tick_count
+        i = 0
+        while i < len(prompts) or eng.pending:
+            while i < len(prompts) and \
+                    eng.tick_count - start >= arrivals[i]:
+                eng.submit(prompts[i], w["gen"])
+                i += 1
+            if not eng.pending:
+                eng.tick_count += 1   # idle tick: nothing admitted yet
+                continue
+            eng.step()
+
+    # warmup: the full workload once, so every tick trace (prefill
+    # masked/unmasked x decode on/off) is compiled before the timed run
+    drive()
+    eng.history.clear()
+    t0 = time.perf_counter()
+    drive()
+    wall = time.perf_counter() - t0
+
+    fins = eng.history
+    ttft = np.sort([f.ttft for f in fins])
+    tpot = np.sort([(f.latency - f.ttft) / max(len(f.tokens) - 1, 1)
+                    for f in fins])
+    n_tok = sum(len(f.tokens) for f in fins)
+    pct = lambda a, q: float(np.percentile(a, q)) * 1e6
+    return {
+        "ttft_p50_us": pct(ttft, 50),
+        "ttft_p95_us": pct(ttft, 95),
+        "tpot_p50_us": pct(tpot, 50),
+        "tpot_p95_us": pct(tpot, 95),
+        "saturation_tok_s": n_tok / wall,
+        "slot_bytes": decode_state_bytes(cfg, 1, w["max_len"]),
+        "slot_bytes_4k": decode_state_bytes(cfg, 1, 4096),
+        "n_requests": len(fins),
+        "ticks": eng.tick_count,
+    }
+
+
+def collect(quick: bool = True) -> dict:
+    """Structured results: {meta, suites: {backend: {metric: value}}}."""
+    import jax
+
+    w = _workload(quick)
+    suites = {}
+    for name in BACKENDS:
+        suites[name] = _bench_backend(name, w)
+        if "kernel" in name and jax.default_backend() != "tpu":
+            # off-TPU the kernel decode path is the jnp fallback — label the
+            # cell so regression checks never compare it across platforms
+            suites[name]["interpret"] = True
+    return {
+        "meta": {"platform": jax.default_backend(), "quick": quick,
+                 "workload": w},
+        "suites": suites,
+    }
+
+
+def rows(results: dict):
+    for backend, metrics in results["suites"].items():
+        tput = metrics["saturation_tok_s"]
+        for key, val in metrics.items():
+            if key.endswith("_us"):
+                yield csv_row(f"serve/{backend}/{key[:-3]}", val,
+                              f"{tput:.1f}tok/s")
+
+
+def run(quick: bool = True):
+    """benchmarks.run suite hook."""
+    yield from rows(collect(quick=quick))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
+                    default=None, metavar="PATH")
+    args = ap.parse_args()
+    fresh = collect(quick=not args.full)
+    print("name,us_per_call,derived")
+    for row in rows(fresh):
+        print(row, flush=True)
+    if args.json:
+        from benchmarks.run import _regression_summary
+        if os.path.exists(args.json):
+            try:
+                with open(args.json) as f:
+                    print(_regression_summary(json.load(f), fresh),
+                          flush=True)
+            except (json.JSONDecodeError, OSError) as e:
+                print(f"bench-serve: baseline unreadable ({e}) — skipping "
+                      f"regression check", file=sys.stderr)
+        else:
+            print("bench-serve: no baseline yet — writing first one",
+                  flush=True)
+        with open(args.json, "w") as f:
+            json.dump(fresh, f, indent=2)
+            f.write("\n")
+        print(f"bench-serve: wrote {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,34 +1,49 @@
-"""Serving example: batched requests, prefill + streaming decode.
+"""Serving example: continuous batching with O(1)-in-context slot state.
 
-Highlights the fastmax serving property: per-sequence state is the moment
-tuple — the same size whether the prompt was 100 tokens or 100k tokens.
+Three views of the same engine (docs/serving.md):
+  1. continuous batching — requests of different lengths admitted into a
+     fixed slot pool, chunked prefill interleaved with batched decode;
+  2. per-token streaming via `ServeEngine.stream`;
+  3. the memory asymmetry — a fastmax slot costs the same bytes at 64 or
+     8192 context, while the softmax KV baseline grows linearly.
 
 Run: PYTHONPATH=src python examples/serve.py
 """
-import time
+import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.attention import AttentionSpec
 from repro.configs import get_smoke_config
-from repro.launch.serve import generate
-from repro.models import init_decode_state, init_model
-from repro.models.param import tree_bytes
+from repro.core.decode_state import decode_state_bytes
+from repro.models import init_model
+from repro.serve import ServeEngine
 
-cfg = get_smoke_config("qwen2.5-32b")
+cfg = get_smoke_config("qwen3-1.7b")
 params, _ = init_model(jax.random.PRNGKey(0), cfg)
-
 rng = np.random.default_rng(0)
-BATCH, GEN = 4, 24
-for prompt_len in (32, 256):
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (BATCH, prompt_len)), jnp.int32)
-    state = init_decode_state(cfg, BATCH, prompt_len + GEN)
-    t0 = time.monotonic()
-    toks = generate(params, cfg, prompts, GEN)
-    dt = time.monotonic() - t0
-    print(f"prompt={prompt_len:5d}: generated {toks.shape[1]} tok/seq x "
-          f"{BATCH} seqs in {dt:.2f}s; decode state "
-          f"{tree_bytes(state)/1e6:.2f} MB (constant in prompt length)")
-print("sample tokens:", np.asarray(toks[0][:12]))
+
+# -- 1. continuous batching: staggered requests, one slot pool ------------
+eng = ServeEngine(params, cfg, max_slots=3, max_len=128,
+                  policy="lpf", prefix_cache_bytes=16 << 20)
+rids = [eng.submit(rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                   max_new_tokens=12)
+        for n in (40, 17, 65, 23)]            # 4 requests, 3 slots
+outs = eng.run()
+for rid in rids:
+    print(f"request {rid}: {len(outs[rid])} tokens  {outs[rid][:8]}")
+for fin in eng.history:
+    print(f"  rid {fin.rid}: prompt {fin.prompt_len:3d}  "
+          f"ttft {fin.ttft * 1e3:6.1f} ms  latency {fin.latency * 1e3:6.1f} ms")
+
+# -- 2. streaming: tokens yielded as the pool produces them ---------------
+prompt = rng.integers(0, cfg.vocab_size, 30).astype(np.int32)
+print("streamed:", *list(eng.stream(prompt, max_new_tokens=8)))
+
+# -- 3. the point: slot bytes vs context length ---------------------------
+soft = dataclasses.replace(cfg, attn=AttentionSpec.parse("softmax"))
+print(f"{'ctx':>6} {'fastmax slot':>14} {'softmax slot':>14}")
+for ctx in (64, 512, 8192):
+    print(f"{ctx:6d} {decode_state_bytes(cfg, 1, ctx):14,d} "
+          f"{decode_state_bytes(soft, 1, ctx):14,d}")

@@ -112,7 +112,8 @@ def _kernel_plan(q, k, v):
 class KVCache(NamedTuple):
     k: jnp.ndarray       # [B, Hkv, Nmax, D]
     v: jnp.ndarray       # [B, Hkv, Nmax, Dv]
-    length: jnp.ndarray  # [] int32
+    length: jnp.ndarray  # [] int32 (shared), or [B] int32 (slot-indexed:
+    #                      per-sequence write cursors — repro.serve pools)
     mask: jnp.ndarray    # [B, Hkv, Nmax] validity (1=real token) — lets a
     #                      masked prefill stay masked through every step
 
@@ -155,35 +156,78 @@ def init_state(spec: AttentionSpec, *, batch: int, n_kv_heads: int,
 
 def prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             spec: AttentionSpec, *, state: AttnState,
-            kv_mask: Optional[jnp.ndarray] = None):
+            kv_mask: Optional[jnp.ndarray] = None,
+            offset: Optional[jnp.ndarray] = None):
     """Causal prefill of a prompt: returns (outputs, primed AttnState).
 
     softmax: fills the KV cache. fastmax: one chunked causal scan produces
     BOTH the outputs and the final moments (the seed recomputed moments in a
     second pass).
+
+    `offset` (traced scalar) makes the prefill RESUMABLE: the incoming
+    `state` is treated as the state of tokens [0, offset) and this call
+    appends tokens [offset, offset + n) — the chunked-prefill primitive of
+    the serving engine (`repro.serve`). softmax writes the chunk at
+    `offset` in the cache and attends over the valid prefix via `q_offset`;
+    fastmax seeds the causal scan with the carried moments. With
+    `offset=None` the legacy whole-prompt behavior (and its exact HLO) is
+    preserved. `kv_mask` may be [B, N] or [B, Hkv, N]; with a vector
+    `length` lane (slot pools) the new lengths are per-sequence
+    offset + (valid tokens in this chunk).
     """
-    n = q.shape[2]
+    b, n = q.shape[0], q.shape[2]
+    hkv = k.shape[1]
     _check_state(state, spec)
+    if kv_mask is not None and kv_mask.ndim == 2:
+        kv_mask = jnp.broadcast_to(kv_mask[:, None], (b, hkv, n))
     if spec.family == "softmax":
         from repro.sharding.rules import constrain_kv_cache
         kv = state.kv
+        off = jnp.asarray(0 if offset is None else offset, jnp.int32)
         kc = jax.lax.dynamic_update_slice_in_dim(
-            kv.k, k.astype(kv.k.dtype), 0, axis=2)
+            kv.k, k.astype(kv.k.dtype), off, axis=2)
         vc = jax.lax.dynamic_update_slice_in_dim(
-            kv.v, v.astype(kv.v.dtype), 0, axis=2)
+            kv.v, v.astype(kv.v.dtype), off, axis=2)
         kc = constrain_kv_cache(kc)
         vc = constrain_kv_cache(vc)
-        o = softmax_attention(q, k, v, causal=True, kv_mask=kv_mask)
         mc = kv.mask
         if kv_mask is not None:
             # persist prompt padding so every later step keeps it masked
             mc = jax.lax.dynamic_update_slice_in_dim(
-                mc, kv_mask.astype(mc.dtype), 0, axis=2)
-        return o, AttnState(
-            kv=KVCache(kc, vc, jnp.asarray(n, jnp.int32), mc), moments=None)
+                mc, kv_mask.astype(mc.dtype), off, axis=2)
+        if offset is None:
+            o = softmax_attention(q, k, v, causal=True, kv_mask=kv_mask)
+        else:
+            # resume: attend over the whole cache — rows < offset are the
+            # carried prefix (validity from the mask lane), rows >= offset+n
+            # are excluded causally via q_offset
+            o = softmax_attention(q, kc, vc, causal=True, q_offset=off,
+                                  kv_mask=mc)
+        if kv.length.ndim == 0:
+            # legacy shared cursor: padding rows stay masked via the mask
+            # lane but still occupy cache rows (decode appends at n)
+            new_len = off + jnp.asarray(n, jnp.int32)
+        else:
+            # slot pools: per-sequence cursors — decode appends right after
+            # each sequence's last VALID token
+            nvalid = (jnp.full((b,), n, jnp.int32) if kv_mask is None else
+                      jnp.sum(kv_mask[:, 0, :] > 0, axis=-1).astype(jnp.int32))
+            new_len = off + jnp.broadcast_to(nvalid, kv.length.shape)
+        return o, AttnState(kv=KVCache(kc, vc, new_len, mc), moments=None)
     spec_r = spec.resolved()
     qh = normalize_qk(q) if spec.normalize else q
     kh = normalize_qk(k) if spec.normalize else k
+    if offset is not None:
+        # resumable chunked prefill: seed the jnp scan with the carried
+        # moments (the Pallas prefill kernels take no initial carry; decode
+        # steps after the handoff still route to the kernels)
+        _log_once("prefill: resumable (offset) chunk -> jnp moment scan")
+        fs = feature_shard_flag(k.shape[1])
+        o, final = _causal_scan(
+            qh, kh, v, p=spec.p, chunk_size=spec_r.chunk_size,
+            kv_mask=kv_mask, denom_eps=spec.denom_eps, feature_shard=fs,
+            init=state.moments)
+        return o.astype(q.dtype), AttnState(kv=None, moments=Moments(*final))
     if use_decode_kernel(spec):
         # one kernel launch yields outputs AND the final carry — the
         # prefill→decode handoff without recomputing moments
@@ -227,10 +271,24 @@ def step(state: AttnState, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     if spec.family == "softmax":
         from repro.sharding.rules import constrain_kv_cache, model_axis_size
         kv = state.kv
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            kv.k, k.astype(kv.k.dtype), kv.length, axis=2)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            kv.v, v.astype(kv.v.dtype), kv.length, axis=2)
+        if kv.length.ndim == 0:
+            # legacy shared cursor: one dynamic_update_slice for the batch
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                kv.k, k.astype(kv.k.dtype), kv.length, axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                kv.v, v.astype(kv.v.dtype), kv.length, axis=2)
+            mc = kv.mask
+        else:
+            # slot-indexed pool: per-sequence write cursors (each slot may
+            # sit at a different context length) — scatter one row per
+            # sequence, and mark the written row valid in the mask lane
+            # (chunked prefill may have left a padding marker there)
+            bidx = jnp.arange(kv.k.shape[0])
+            kc = kv.k.at[bidx, :, kv.length].set(
+                k[:, :, 0, :].astype(kv.k.dtype))
+            vc = kv.v.at[bidx, :, kv.length].set(
+                v[:, :, 0, :].astype(kv.v.dtype))
+            mc = kv.mask.at[bidx, :, kv.length].set(1.0)
         # pin the freshly-updated cache to its committed inter-step layout
         # (kv_cache_spec: heads over 'model' when divisible, else the
         # sequence dim) — without this the partitioner resolves the
@@ -240,8 +298,9 @@ def step(state: AttnState, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         kc = constrain_kv_cache(kc)
         vc = constrain_kv_cache(vc)
         nmax = kc.shape[2]
-        mask = (jnp.arange(nmax)[None, None, :] <= kv.length).astype(
-            jnp.float32) * kv.mask
+        length_b = kv.length if kv.length.ndim else kv.length[None]
+        mask = (jnp.arange(nmax)[None, None, :]
+                <= length_b[:, None, None]).astype(jnp.float32) * mc
         mask = constrain_kv_cache(mask)
         tp = model_axis_size()
         if tp > 1 and k.shape[1] % tp != 0:
@@ -251,7 +310,7 @@ def step(state: AttnState, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             from repro.sharding.rules import replicate
             q = replicate(q, batch_dim=0)
         o = softmax_attention(q, kc, vc, causal=False, kv_mask=mask)
-        return o, AttnState(kv=KVCache(kc, vc, kv.length + 1, kv.mask),
+        return o, AttnState(kv=KVCache(kc, vc, kv.length + 1, mc),
                             moments=None)
 
     qh = normalize_qk(q) if spec.normalize else q

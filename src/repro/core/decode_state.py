@@ -24,7 +24,26 @@ from repro.core.fastmax import (
     normalize_qk,
 )
 
-__all__ = ["init_fastmax_state", "fastmax_decode_step", "fastmax_prefill"]
+__all__ = ["init_fastmax_state", "fastmax_decode_step", "fastmax_prefill",
+           "decode_state_bytes"]
+
+
+def decode_state_bytes(cfg, batch: int, max_len: int) -> int:
+    """Bytes of the full-model decode state for `batch` sequences of up to
+    `max_len` tokens, WITHOUT allocating it (jax.eval_shape).
+
+    This is the number the serving engine's slot accounting (and the
+    BENCH_serve.json slot-memory cells) report: for fastmax specs it is
+    INDEPENDENT of `max_len` (constant moment tuples), for the softmax
+    baseline it grows linearly (KV cache rows) — the asymmetry that lets
+    `repro.serve` batch 500k-context and 64-token requests into
+    identically-sized slots with no paged-KV machinery.
+    """
+    from repro.models import decode_state_specs  # lazy: core must not
+    #                                              import models at top level
+    specs = decode_state_specs(cfg, batch, max_len)
+    return int(sum(s.size * jnp.dtype(s.dtype).itemsize
+                   for s in jax.tree.leaves(specs)))
 
 
 def init_fastmax_state(

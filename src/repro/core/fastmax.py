@@ -375,12 +375,17 @@ def _intra_chunk(qg, kc, vc, *, p, wc):
 
 
 def _causal_scan(q, k, v, *, p, chunk_size, kv_mask, denom_eps,
-                 feature_shard=False):
+                 feature_shard=False, init: Optional[Moments] = None):
     """Chunked causal fastmax. Returns (o, final_moments).
 
     Carry = moments of all *previous* chunks; each chunk adds an exact
     intra-chunk term computed through the f(QK^T) block (same numbers as the
     factorized form, cheaper for the diagonal).
+
+    `init` seeds the scan carry with existing moments (resumable prefill:
+    the serving engine's chunked prefill continues a slot's moment state at
+    an arbitrary token offset — queries in this call then attend to every
+    token already folded into `init` plus the causal prefix of this call).
 
     `feature_shard=True` makes the scan sharding-aware end to end: the
     stacked chunk inputs are pinned to one total layout (q/k/w model-
@@ -434,6 +439,9 @@ def _causal_scan(q, k, v, *, p, chunk_size, kv_mask, denom_eps,
     zero = jax.tree.map(
         jnp.zeros_like, compute_moments(ks[0], vs[0], p=p, kv_mask=ws[0])
     )
+    if init is not None:
+        # resume from an existing carry; match the scan's accumulator dtypes
+        zero = Moments(*(i.astype(z.dtype) for z, i in zip(zero, init)))
     if feature_shard:
         zero = _constrain_moments_j(zero)
 

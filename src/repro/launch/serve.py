@@ -6,9 +6,17 @@ token (the paper's asymptotic claim, made concrete; see
 examples/long_context.py). Softmax baseline uses a (sequence-sharded at
 scale) KV cache.
 
+Two paths:
+
+  default          `generate()` — one static batch, whole-prompt prefill,
+                   lockstep greedy decode (optionally eos-early-stopped).
+  --serve-engine   `repro.serve.ServeEngine` — continuous batching over a
+                   slot pool: staggered admissions, chunked prefill mixed
+                   with decode, per-request streaming. See docs/serving.md.
+
 Usage (CPU, reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
-      --batch 4 --prompt-len 64 --gen 32
+      --batch 4 --prompt-len 64 --gen 32 [--serve-engine --slots 4]
 """
 from __future__ import annotations
 
@@ -23,23 +31,61 @@ from repro.configs import get_config, get_smoke_config
 from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import init_decode_state, init_model
 
+# jitted prefill/step per config — reused across generate() calls so a
+# warmup call actually warms the timed call (cfg is frozen/hashable)
+_JIT_CACHE: dict = {}
+
+
+def _jitted_steps(cfg):
+    fns = _JIT_CACHE.get(cfg)
+    if fns is None:
+        fns = (jax.jit(make_prefill_step(cfg)), jax.jit(make_serve_step(cfg)))
+        _JIT_CACHE[cfg] = fns
+    return fns
+
 
 def generate(params, cfg, prompts: jnp.ndarray, n_gen: int,
-             max_len: int | None = None, enc_out=None):
-    """prompts: [B, P] int32. Greedy decode of n_gen tokens."""
+             max_len: int | None = None, enc_out=None,
+             eos_id: int | None = None):
+    """prompts: [B, P] int32. Greedy decode of n_gen tokens.
+
+    With `eos_id`, a sequence that emits it is frozen: its remaining
+    positions are filled with `eos_id`, and the loop exits early once
+    every sequence is done (per-sequence done mask).
+    """
     b, plen = prompts.shape
     state = init_decode_state(cfg, b, (max_len or (plen + n_gen)))
-    prefill = jax.jit(make_prefill_step(cfg))
-    step = jax.jit(make_serve_step(cfg))
+    prefill, step = _jitted_steps(cfg)
     tok, state = prefill(params, state, prompts, *(
         [enc_out] if enc_out is not None else []))
+    done = (tok == eos_id) if eos_id is not None else None
     out = [tok]
     for i in range(n_gen - 1):
+        if done is not None and bool(done.all()):
+            out.extend([jnp.full_like(tok, eos_id)] * (n_gen - 1 - i))
+            break
         pos = jnp.asarray(plen + i, jnp.int32)  # traced: no retrace per step
         tok, state = step(params, state, tok, pos, *(
             [enc_out] if enc_out is not None else []))
+        if done is not None:
+            tok = jnp.where(done, eos_id, tok)
+            done = done | (tok == eos_id)
         out.append(tok)
     return jnp.stack(out, axis=1)
+
+
+def _run_engine(params, cfg, prompts, n_gen, args):
+    """Continuous-batching path: submit the batch as staggered requests."""
+    from repro.serve import ServeEngine
+
+    max_len = prompts.shape[1] + n_gen
+    eng = ServeEngine(
+        params, cfg, max_slots=args.slots, max_len=max_len,
+        eos_id=args.eos_id, policy=args.policy,
+        prefix_cache_bytes=args.prefix_cache_mb << 20)
+    rids = [eng.submit(p, n_gen) for p in np.asarray(prompts)]
+    outs = eng.run()
+    return eng, [outs[r] for r in rids]
 
 
 def main(argv=None):
@@ -50,6 +96,12 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--serve-engine", action="store_true",
+                    help="continuous batching via repro.serve.ServeEngine")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--policy", default="fcfs", choices=("fcfs", "lpf"))
+    ap.add_argument("--prefix-cache-mb", type=int, default=0)
     args = ap.parse_args(argv)
 
     import dataclasses
@@ -72,8 +124,32 @@ def main(argv=None):
             cfg.adtype())
         enc_out = encode(params, frames, cfg)
 
+    if args.serve_engine:
+        # warmup batch traces the engine's tick variants; the timed batch
+        # reuses the same engine (and therefore its jit caches)
+        eng, _ = _run_engine(params, cfg, prompts, args.gen, args)
+        t0 = time.monotonic()
+        rids = [eng.submit(p, args.gen) for p in np.asarray(prompts)]
+        outs = eng.run()
+        dt = time.monotonic() - t0
+        n_tok = sum(len(outs[r]) for r in rids)
+        ttfts = sorted(f.ttft for f in eng.history[-len(rids):])
+        print(f"[engine] generated {n_tok} tokens in {dt:.2f}s "
+              f"({n_tok / dt:.1f} tok/s)  ttft p50 "
+              f"{ttfts[len(ttfts) // 2] * 1e3:.1f}ms  "
+              f"slot bytes {eng.slots.state_bytes_per_slot()}  sample: "
+              f"{outs[rids[0]][:16]}")
+        return
+
+    # warmup: trace + compile out of the timed region (jits are cached
+    # per-config, so the timed call reuses them)
+    toks = jax.block_until_ready(
+        generate(params, cfg, prompts, args.gen, enc_out=enc_out,
+                 eos_id=args.eos_id))
     t0 = time.monotonic()
-    toks = generate(params, cfg, prompts, args.gen, enc_out=enc_out)
+    toks = jax.block_until_ready(
+        generate(params, cfg, prompts, args.gen, enc_out=enc_out,
+                 eos_id=args.eos_id))
     dt = time.monotonic() - t0
     print(f"generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)  sample: "

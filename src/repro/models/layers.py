@@ -216,20 +216,31 @@ def init_attn_state(cfg, batch: int, max_len: int, dtype) -> AttnState:
 
 
 def attention_decode(params, x_t, state: AttnState, cfg, *, position):
-    """One-token decode. x_t: [B, 1, d]. Returns (y_t, new_state)."""
-    pos = jnp.reshape(position, (1,)).astype(jnp.int32)
+    """One-token decode. x_t: [B, 1, d]. Returns (y_t, new_state).
+
+    `position` is a scalar (shared timeline — the legacy serve loop) or a
+    [B] vector (slot-indexed serving: every sequence sits at its own
+    context length, so RoPE must rotate per slot)."""
+    pos = jnp.atleast_1d(jnp.asarray(position, jnp.int32))[:, None]
     q, k, v = _project_qkv(params, x_t, cfg, pos)
     o, new = A.step(state, q, k, v, cfg.attn_spec)
     y = jnp.einsum("bhnk,hkd->bnd", o.astype(x_t.dtype), params["wo"])
     return y, new
 
 
-def attention_prefill(params, x, state: AttnState, cfg, *, positions=None):
-    """Prefill a prompt, returning outputs and a primed decode state."""
+def attention_prefill(params, x, state: AttnState, cfg, *, positions=None,
+                      kv_mask=None, offset=None):
+    """Prefill a prompt, returning outputs and a primed decode state.
+
+    `offset`/`kv_mask` make it a resumable chunk prefill (repro.serve):
+    the chunk's tokens occupy positions [offset, offset + n) and padding
+    rows (kv_mask 0) contribute nothing to the carried state."""
     b, n, _ = x.shape
     if positions is None:
-        positions = jnp.arange(n, dtype=jnp.int32)
+        off = 0 if offset is None else offset
+        positions = off + jnp.arange(n, dtype=jnp.int32)
     q, k, v = _project_qkv(params, x, cfg, positions)
-    o, new = A.prefill(q, k, v, cfg.attn_spec, state=state)
+    o, new = A.prefill(q, k, v, cfg.attn_spec, state=state, kv_mask=kv_mask,
+                       offset=offset)
     y = jnp.einsum("bhnk,hkd->bnd", o.astype(x.dtype), params["wo"])
     return y, new

@@ -383,8 +383,10 @@ def lm_decode_step(params, state, token_t, cfg: ModelConfig, *, position,
     if cfg.pos_emb == "sinusoidal":
         d = cfg.d_model
         dim = jnp.arange(0, d, 2, dtype=jnp.float32)
-        ang = jnp.asarray(position, jnp.float32) / jnp.power(10000.0, dim / d)
-        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None]
+        # position: scalar (shared timeline) or [B] (slot-indexed serving)
+        pos = jnp.atleast_1d(jnp.asarray(position, jnp.float32))
+        ang = pos[:, None] / jnp.power(10000.0, dim / d)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, None]
         x = x + pe.astype(x.dtype)
 
     for i in range(cfg.first_k_dense):
@@ -415,22 +417,40 @@ def lm_decode_step(params, state, token_t, cfg: ModelConfig, *, position,
     return _logits(params, x, cfg)[:, 0], state
 
 
-def lm_prefill(params, tokens, cfg: ModelConfig, state, *, enc_out=None):
+def lm_prefill(params, tokens, cfg: ModelConfig, state, *, enc_out=None,
+               offset=None, kv_mask=None):
     """Prefill a prompt through the decode-state machinery.
 
     For fastmax archs this is the chunked causal scan per layer (linear in
     prompt length); for the softmax baseline it fills the KV cache.
+
+    `offset` (traced scalar) resumes an already-primed state: this call's
+    tokens occupy positions [offset, offset + n) — the serving engine's
+    chunked-prefill tick (repro.serve). `kv_mask` ([B, N], 1 = real token)
+    masks right-padding in a partial final chunk; padding contributes
+    nothing to the carried attention state. SSM mixers (mamba/xlstm) resume
+    through their own recurrent states but do not support kv_mask — the
+    engine only pads chunks for attention-mixer architectures.
     """
     x = params["embed"][tokens].astype(cfg.adtype())
     if cfg.pos_emb == "sinusoidal":
-        x = x + _sinusoidal(x.shape[1], cfg.d_model, x.dtype)[None]
+        if offset is None:
+            x = x + _sinusoidal(x.shape[1], cfg.d_model, x.dtype)[None]
+        else:
+            d = cfg.d_model
+            dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+            pos = (offset + jnp.arange(x.shape[1])).astype(jnp.float32)
+            ang = pos[:, None] / jnp.power(10000.0, dim / d)
+            pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+            x = x + pe[None].astype(x.dtype)
 
     def block_prefill(params_b, x, st, kind):
         mixer, ffn = kind.split(":")
         h = L.apply_norm(params_b["norm1"], x, norm_type=cfg.norm_type,
                          eps=cfg.norm_eps)
         if mixer == "attn":
-            y, st = L.attention_prefill(params_b["mixer"], h, st, cfg)
+            y, st = L.attention_prefill(params_b["mixer"], h, st, cfg,
+                                        kv_mask=kv_mask, offset=offset)
         elif mixer == "mamba":
             xi, z, delta, a, bm_, cm_, conv = M._pre_ssm(
                 params_b["mixer"], h, cfg, conv_state=st.conv)

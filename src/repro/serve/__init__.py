@@ -1,0 +1,15 @@
+"""Continuous-batching serving engine (FAST's O(1)-state decode, served).
+
+    engine.ServeEngine   submit()/step()/stream(): mixed chunked-prefill +
+                         batched-decode ticks over a fixed slot pool
+    slots.SlotManager    slot-indexed decode state, O(1) admit/evict
+    scheduler.Scheduler  fcfs / longest-prefill-first admission
+    prefix_cache         prompt-prefix snapshot reuse (LRU byte budget)
+"""
+from repro.serve.engine import FinishedRequest, ServeEngine  # noqa: F401
+from repro.serve.prefix_cache import PrefixCache  # noqa: F401
+from repro.serve.scheduler import Request, Scheduler  # noqa: F401
+from repro.serve.slots import SlotManager  # noqa: F401
+
+__all__ = ["ServeEngine", "FinishedRequest", "PrefixCache", "Request",
+           "Scheduler", "SlotManager"]

@@ -1,0 +1,299 @@
+"""Continuous-batching serving engine over the unified decode protocol.
+
+One `ServeEngine` owns a `SlotManager` pool of `max_slots` sequences and
+advances the whole pool one "tick" at a time. Each tick is ONE jitted
+launch that mixes the two kinds of work (3 traces total, keyed by which
+parts are present):
+
+  prefill part  -> the next `chunk`-token slice of ONE pending request's
+                   prompt runs through `lm_prefill(offset=...)` against
+                   that slot's state (read_slot -> prefill -> write_slot).
+                   The chunk that completes the prompt also emits the
+                   request's FIRST token (argmax of the last valid row).
+  decode part   -> every active slot takes one `lm_decode_step` with its
+                   own last token and its own position lane; slots that
+                   are inactive / mid-prefill ride through the batched
+                   compute and are restored by `select_slots`.
+
+All backends route through the same `init_state`/`prefill`/`step`
+protocol, so the engine works unchanged for softmax-KV, fastmax (chunked
+or kernel), GQA/MQA, and SSM-mixer architectures. Greedy decoding matches
+`launch.serve.generate` token-for-token (the parity contract
+`tests/test_serve.py` pins for every registered backend).
+
+Chunked prefill decomposition equals `generate()`'s internal scan when
+`chunk == cfg.chunk_size` (the default) — for fastmax backends the moment
+arithmetic is then bit-identical, not merely close.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import ModelConfig, lm_decode_step, lm_prefill
+from repro.serve.prefix_cache import PrefixCache
+from repro.serve.scheduler import Request, Scheduler
+from repro.serve.slots import SlotManager, read_slot, select_slots, write_slot
+
+__all__ = ["ServeEngine", "FinishedRequest"]
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    rid: int
+    tokens: np.ndarray            # [n_generated] int32 (includes eos if hit)
+    prompt_len: int
+    ttft: float                   # submit -> first token (s)
+    latency: float                # submit -> finish (s)
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, max_slots: int = 4,
+                 max_len: int = 512, eos_id: Optional[int] = None,
+                 policy: str = "fcfs", chunk: Optional[int] = None,
+                 prefix_cache_bytes: int = 0, max_wait: int = 64):
+        if cfg.encoder_layers > 0:
+            raise NotImplementedError(
+                "repro.serve targets decoder-only models; use "
+                "launch.serve.generate for encoder-decoder")
+        self.params = params
+        self.cfg = cfg
+        self.eos_id = eos_id
+        self.chunk = int(chunk or cfg.chunk_size)
+        self.slots = SlotManager(cfg, max_slots, max_len)
+        self.scheduler = Scheduler(policy, max_wait=max_wait)
+        self.prefix_cache = (PrefixCache(prefix_cache_bytes, chunk=self.chunk)
+                             if prefix_cache_bytes > 0 else None)
+        # ragged final chunks are right-padded + kv_mask'ed, which only the
+        # attention prefill path understands; SSM mixers get an exact-length
+        # (retracing) ragged chunk instead
+        self._pad_ragged = all(k.split(":")[0] == "attn"
+                               for k in cfg.pattern)
+
+        b = self.slots.max_slots
+        self._rid: List[Optional[int]] = [None] * b
+        self._req: Dict[int, Request] = {}
+        self._prompt_len = np.zeros(b, np.int32)
+        self._last_token = np.zeros(b, np.int32)
+        self._generated: Dict[int, List[int]] = {}
+        self._next_rid = 0
+        self.tick_count = 0
+        self.decode_tokens = 0        # decode-part tokens (TPOT accounting)
+        self.prefill_tokens = 0
+        self.history: List[FinishedRequest] = []   # load-gen latency stats
+
+        self._tick_fn = jax.jit(
+            functools.partial(_tick, cfg=cfg, axes=self.slots.axes),
+            static_argnames=("do_prefill", "do_decode"))
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int, *, eos_id=None,
+               callback=None) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) + max_new_tokens > self.slots.max_len:
+            raise ValueError(
+                f"prompt {len(prompt)} + gen {max_new_tokens} exceeds "
+                f"max_len {self.slots.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.scheduler.push(Request(
+            rid=rid, prompt=prompt, max_new_tokens=int(max_new_tokens),
+            eos_id=self.eos_id if eos_id is None else eos_id,
+            callback=callback, submit_tick=self.tick_count,
+            submit_time=time.monotonic()))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        """Requests not yet finished (queued + in a slot)."""
+        return len(self.scheduler) + sum(r is not None for r in self._rid)
+
+    # -- the tick ------------------------------------------------------------
+
+    def step(self) -> List[FinishedRequest]:
+        """Advance the pool by one mixed prefill+decode launch. Returns the
+        requests that finished this tick."""
+        self.tick_count += 1
+        self._admit()
+
+        pre = self._pick_prefill()
+        live = self.slots.active & ~self.slots.eos
+        do_decode = bool(live.any())
+        if pre is None and not do_decode:
+            return []
+
+        slot = chunk_tok = kv_mask = off = nvalid = None
+        if pre is not None:
+            slot, chunk_tok, kv_mask, off, nvalid = pre
+        state, first_tok, nxt = self._tick_fn(
+            self.params, self.slots.state,
+            None if pre is None else jnp.asarray(slot, jnp.int32),
+            chunk_tok, kv_mask,
+            None if pre is None else jnp.asarray(off, jnp.int32),
+            None if pre is None else jnp.asarray(nvalid, jnp.int32),
+            None if not do_decode else jnp.asarray(self._last_token),
+            None if not do_decode else jnp.asarray(self.slots.position),
+            None if not do_decode else jnp.asarray(live),
+            do_prefill=pre is not None, do_decode=do_decode)
+        self.slots.state = state
+
+        finished: List[FinishedRequest] = []
+        if pre is not None:
+            self._after_prefill(slot, nvalid, first_tok, finished)
+        if do_decode:
+            self._after_decode(live, np.asarray(nxt), finished)
+        return finished
+
+    def run(self, *, max_ticks: int = 1_000_000) -> Dict[int, np.ndarray]:
+        """Drive ticks until every submitted request finished. Returns
+        {rid: generated tokens}."""
+        done: Dict[int, np.ndarray] = {}
+        for _ in range(max_ticks):
+            if not self.pending:
+                break
+            for fin in self.step():
+                done[fin.rid] = fin.tokens
+        return done
+
+    def stream(self, prompt, max_new_tokens: int, *,
+               eos_id=None) -> Iterator[int]:
+        """Submit one request and yield its tokens as they are produced
+        (other already-submitted requests keep making progress)."""
+        box: List[int] = []
+        rid = self.submit(prompt, max_new_tokens, eos_id=eos_id,
+                          callback=lambda _rid, tok: box.append(tok))
+        while True:
+            fins = self.step()
+            while box:
+                yield box.pop(0)
+            if any(f.rid == rid for f in fins):
+                return
+
+    # -- internals -----------------------------------------------------------
+
+    def _admit(self) -> None:
+        for slot in range(self.slots.max_slots):
+            if self._rid[slot] is not None:
+                continue
+            req = self.scheduler.pop(self.tick_count)
+            if req is None:
+                return
+            offset, snap = (0, None)
+            if self.prefix_cache is not None:
+                offset, snap = self.prefix_cache.lookup(req.prompt)
+            self.slots.admit(slot, unit_state=snap, position=offset)
+            self._rid[slot] = req.rid
+            self._req[req.rid] = req
+            self._prompt_len[slot] = len(req.prompt)
+            self._generated[req.rid] = []
+
+    def _pick_prefill(self):
+        """Lowest slot still owing prompt tokens -> its next chunk."""
+        for slot in range(self.slots.max_slots):
+            rid = self._rid[slot]
+            if rid is None or self.slots.active[slot] or self.slots.eos[slot]:
+                continue
+            pos = int(self.slots.position[slot])
+            plen = int(self._prompt_len[slot])
+            if pos >= plen:
+                continue
+            n = min(self.chunk, plen - pos)
+            toks = self._req[rid].prompt[pos:pos + n]
+            if n == self.chunk:
+                chunk_tok = jnp.asarray(toks[None], jnp.int32)
+                kv_mask = None
+            elif self._pad_ragged:
+                padded = np.zeros(self.chunk, np.int32)
+                padded[:n] = toks
+                chunk_tok = jnp.asarray(padded[None], jnp.int32)
+                kv_mask = jnp.asarray(
+                    (np.arange(self.chunk) < n)[None].astype(np.float32))
+            else:
+                chunk_tok = jnp.asarray(toks[None], jnp.int32)
+                kv_mask = None
+            return slot, chunk_tok, kv_mask, pos, n
+
+    def _after_prefill(self, slot: int, nvalid: int, first_tok,
+                       finished: List[FinishedRequest]) -> None:
+        rid = self._rid[slot]
+        req = self._req[rid]
+        self.slots.position[slot] += nvalid
+        self.prefill_tokens += int(nvalid)
+        pos = int(self.slots.position[slot])
+        plen = int(self._prompt_len[slot])
+        if self.prefix_cache is not None and pos % self.chunk == 0:
+            self.prefix_cache.insert(req.prompt, pos,
+                                     self.slots.snapshot(slot))
+        if pos < plen:
+            return
+        # prompt complete: the prefill logits' last valid row is token #1
+        tok = int(np.asarray(first_tok)[0])
+        self.slots.active[slot] = True
+        self._last_token[slot] = tok
+        if req.first_token_time is None:
+            req.first_token_time = time.monotonic()
+        self._emit(slot, rid, tok, finished)
+
+    def _after_decode(self, live: np.ndarray, nxt: np.ndarray,
+                      finished: List[FinishedRequest]) -> None:
+        for slot in np.nonzero(live)[0]:
+            rid = self._rid[slot]
+            tok = int(nxt[slot])
+            self.slots.position[slot] += 1
+            self._last_token[slot] = tok
+            self.decode_tokens += 1
+            self._emit(int(slot), rid, tok, finished)
+
+    def _emit(self, slot: int, rid: int, tok: int,
+              finished: List[FinishedRequest]) -> None:
+        req = self._req[rid]
+        self._generated[rid].append(tok)
+        if req.callback is not None:
+            req.callback(rid, tok)
+        hit_eos = req.eos_id is not None and tok == req.eos_id
+        if hit_eos or len(self._generated[rid]) >= req.max_new_tokens:
+            req.finish_time = time.monotonic()
+            fin = FinishedRequest(
+                rid=rid,
+                tokens=np.asarray(self._generated.pop(rid), np.int32),
+                prompt_len=len(req.prompt),
+                ttft=req.first_token_time - req.submit_time,
+                latency=req.finish_time - req.submit_time)
+            self.history.append(fin)
+            finished.append(fin)
+            self.slots.eos[slot] = True
+            self._rid[slot] = None
+            del self._req[rid]
+            self.slots.evict(slot)
+
+
+def _tick(params, state, slot, chunk_tok, kv_mask, off, nvalid,
+          tokens, positions, live, *, cfg, axes,
+          do_prefill: bool, do_decode: bool):
+    """One mixed launch: chunked prefill for one slot + a batched decode
+    step for the live slots, on the shared pool state. Static
+    do_prefill/do_decode flags -> at most 3 traces."""
+    first_tok = None
+    if do_prefill:
+        unit = read_slot(state, slot, axes)
+        logits, unit = lm_prefill(params, chunk_tok, cfg, unit,
+                                  offset=off, kv_mask=kv_mask)
+        last_row = jax.lax.dynamic_index_in_dim(logits, nvalid - 1, axis=1,
+                                                keepdims=False)
+        first_tok = jnp.argmax(last_row, axis=-1).astype(jnp.int32)
+        state = write_slot(state, unit, slot, axes)
+    nxt = None
+    if do_decode:
+        logits, new_state = lm_decode_step(params, state, tokens, cfg,
+                                           position=positions)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        state = select_slots(live, new_state, state, axes)
+        nxt = jnp.where(live, nxt, tokens)
+    return state, first_tok, nxt

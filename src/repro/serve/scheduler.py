@@ -1,0 +1,68 @@
+"""Admission scheduling for the continuous-batching engine.
+
+Requests wait in a host-side queue until a slot frees up. Two policies:
+
+  fcfs  -> strict arrival order.
+  lpf   -> longest-prefill-first: admit the queued request with the most
+           prompt tokens, so the big prefills start streaming chunks early
+           and short requests fill the decode batch around them. Guarded by
+           `max_wait`: once the oldest request has waited that many engine
+           ticks it is admitted next regardless (no starvation).
+
+The scheduler is pure host bookkeeping — it never touches device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+__all__ = ["Request", "Scheduler", "POLICIES"]
+
+POLICIES = ("fcfs", "lpf")
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [P] int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    callback: Optional[Callable[[int, int], Any]] = None  # (rid, token)
+    submit_tick: int = 0               # engine tick at submission
+    submit_time: float = 0.0           # wall clock (load-gen latency stats)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+
+class Scheduler:
+    def __init__(self, policy: str = "fcfs", *, max_wait: int = 64):
+        if policy not in POLICIES:
+            raise ValueError(f"policy {policy!r} not in {POLICIES}")
+        self.policy = policy
+        self.max_wait = int(max_wait)
+        self._q: deque[Request] = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def push(self, req: Request) -> None:
+        self._q.append(req)
+
+    def pop(self, tick: int) -> Optional[Request]:
+        """Next request to admit, or None if the queue is empty."""
+        if not self._q:
+            return None
+        if self.policy == "fcfs":
+            return self._q.popleft()
+        # lpf: oldest-first once it has starved past max_wait
+        oldest = self._q[0]
+        if tick - oldest.submit_tick >= self.max_wait:
+            return self._q.popleft()
+        i = max(range(len(self._q)),
+                key=lambda j: (len(self._q[j].prompt), -j))
+        req = self._q[i]
+        del self._q[i]
+        return req

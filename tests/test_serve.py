@@ -1,0 +1,301 @@
+"""Continuous-batching engine tier (`serve` marker; `make test-serve`).
+
+The load-bearing contract: the engine — staggered admissions, chunked
+prefill mixed with batched decode, slot reuse — produces EXACTLY the
+tokens `launch.serve.generate` produces per request, for every registered
+decode-capable backend (softmax KV, fastmax p in {1,2} chunked, fastmax
+kernel routing), on a GQA config, plus the SSM-mixer architectures.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.attention import AttentionSpec
+from repro.configs import get_smoke_config
+from repro.launch.serve import generate
+from repro.models import init_decode_state, init_model
+from repro.serve import PrefixCache, Request, Scheduler, ServeEngine
+from repro.serve.slots import SlotManager
+
+pytestmark = pytest.mark.serve
+
+DECODE_SPECS = ["softmax", "fastmax1-chunked", "fastmax2-chunked",
+                "fastmax2-kernel"]
+
+
+def _setup(spec_name=None, arch="qwen3-1.7b", seed=0):
+    cfg = get_smoke_config(arch)
+    if spec_name is not None:
+        cfg = dataclasses.replace(cfg, attn=AttentionSpec.parse(spec_name))
+    params, _ = init_model(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
+
+
+def _ref(params, cfg, prompt, gen, max_len, eos_id=None):
+    return np.asarray(generate(params, cfg, jnp.asarray(prompt[None]), gen,
+                               max_len=max_len, eos_id=eos_id))[0]
+
+
+# ---------------------------------------------------------------------------
+# slot pool unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_slot_write_read_roundtrip():
+    cfg, _ = _setup("fastmax2-chunked")
+    sm = SlotManager(cfg, max_slots=3, max_len=32)
+    # perturb slot 1 with a recognisable unit state, read it back
+    unit = jax.tree.map(lambda l: jnp.full_like(l, 7), sm.fresh_unit)
+    sm.admit(1, unit_state=unit)
+    got = sm.snapshot(1)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(unit)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # neighbours untouched (still the fresh init, not 7s)
+    other = sm.snapshot(0)
+    for a, b in zip(jax.tree.leaves(other), jax.tree.leaves(sm.fresh_unit)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_slot_axes_cover_every_leaf():
+    # every decode-state leaf must expose a batch/slot axis — softmax KV,
+    # moments, and both SSM families
+    for arch in ["qwen3-1.7b", "xlstm-1.3b", "jamba-v0.1-52b"]:
+        cfg, _ = _setup(arch=arch)
+        sm = SlotManager(cfg, max_slots=2, max_len=32)
+        n_state = len(jax.tree.leaves(sm.state))
+        assert n_state == len(jax.tree.leaves(sm.axes))
+
+
+def test_slot_memory_constant_for_fastmax():
+    from repro.core.decode_state import decode_state_bytes
+    cfg_f, _ = _setup("fastmax2-chunked")
+    cfg_s, _ = _setup("softmax")
+    f_small = decode_state_bytes(cfg_f, 1, 128)
+    f_big = decode_state_bytes(cfg_f, 1, 8192)
+    s_small = decode_state_bytes(cfg_s, 1, 128)
+    s_big = decode_state_bytes(cfg_s, 1, 8192)
+    assert f_small == f_big          # O(1) in context
+    assert s_big > s_small * 32      # KV cache is linear in context
+
+
+# ---------------------------------------------------------------------------
+# engine vs generate(): token parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", DECODE_SPECS)
+def test_engine_parity_staggered(spec):
+    """Staggered admissions + ragged prompts produce the same tokens as
+    per-request generate() for every decode-capable backend (GQA config)."""
+    cfg, params = _setup(spec)
+    assert cfg.n_kv_heads < cfg.n_heads  # GQA is actually exercised
+    rng = np.random.default_rng(1)
+    p0 = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)  # ragged tail
+    p1 = rng.integers(0, cfg.vocab_size, 23).astype(np.int32)
+    G = 6
+    ref0 = _ref(params, cfg, p0, G, 64)
+    ref1 = _ref(params, cfg, p1, G, 64)
+    eng = ServeEngine(params, cfg, max_slots=2, max_len=64)
+    r0 = eng.submit(p0, G)
+    outs = {}
+    for _ in range(3):                      # p1 arrives mid-flight
+        for f in eng.step():
+            outs[f.rid] = f.tokens
+    r1 = eng.submit(p1, G)
+    outs.update(eng.run())
+    np.testing.assert_array_equal(outs[r0], ref0)
+    np.testing.assert_array_equal(outs[r1], ref1)
+
+
+@pytest.mark.slow  # ~2 min combined: whole-model SSM prefill compiles
+@pytest.mark.parametrize("arch", ["xlstm-1.3b", "jamba-v0.1-52b"])
+def test_engine_parity_ssm_mixers(arch):
+    """SSM-mixer archs resume via recurrent state (exact-length ragged
+    chunks, no kv_mask) and must still match generate()."""
+    cfg, params = _setup(arch=arch)
+    rng = np.random.default_rng(2)
+    p0 = rng.integers(0, cfg.vocab_size, 33).astype(np.int32)
+    p1 = rng.integers(0, cfg.vocab_size, 17).astype(np.int32)
+    G = 5
+    ref0 = _ref(params, cfg, p0, G, 64)
+    ref1 = _ref(params, cfg, p1, G, 64)
+    eng = ServeEngine(params, cfg, max_slots=2, max_len=64)
+    r0 = eng.submit(p0, G)
+    outs = {}
+    for _ in range(2):
+        for f in eng.step():
+            outs[f.rid] = f.tokens
+    r1 = eng.submit(p1, G)
+    outs.update(eng.run())
+    np.testing.assert_array_equal(outs[r0], ref0)
+    np.testing.assert_array_equal(outs[r1], ref1)
+
+
+def test_engine_slot_reuse_single_slot():
+    """max_slots=1 serving 3 queued requests: each admit fully overwrites
+    the evicted slot — no state leaks between tenants."""
+    cfg, params = _setup("fastmax2-chunked")
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (19, 40, 8)]
+    G = 4
+    refs = [_ref(params, cfg, p, G, 64) for p in prompts]
+    eng = ServeEngine(params, cfg, max_slots=1, max_len=64)
+    rids = [eng.submit(p, G) for p in prompts]
+    outs = eng.run()
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(outs[rid], ref)
+
+
+# ---------------------------------------------------------------------------
+# prefix cache
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_hit_matches_cold_path():
+    """A request resumed from a cached prefix snapshot must decode the
+    exact cold-path tokens, stepped out to 64 tokens."""
+    cfg, params = _setup("fastmax2-chunked")
+    C = cfg.chunk_size
+    rng = np.random.default_rng(4)
+    shared = rng.integers(0, cfg.vocab_size, 2 * C).astype(np.int32)
+    a = np.concatenate([shared,
+                        rng.integers(0, cfg.vocab_size, 5).astype(np.int32)])
+    b = np.concatenate([shared,
+                        rng.integers(0, cfg.vocab_size, 9).astype(np.int32)])
+    G = 64
+    max_len = len(b) + G
+    ref_b = _ref(params, cfg, b, G, max_len)
+    eng = ServeEngine(params, cfg, max_slots=1, max_len=max_len,
+                      prefix_cache_bytes=1 << 30)
+    eng.submit(a, G)
+    eng.run()                                  # populates the cache
+    rb = eng.submit(b, G)
+    outs = eng.run()
+    assert eng.prefix_cache.hits >= 1          # b resumed from a's prefix
+    np.testing.assert_array_equal(outs[rb], ref_b)
+
+
+def test_prefix_cache_lru_byte_budget():
+    cache = PrefixCache(byte_budget=100, chunk=4)
+    state1 = {"x": np.zeros(10, np.float32)}   # 40 bytes
+    p1 = np.arange(8, dtype=np.int32)
+    p2 = np.arange(100, 108, dtype=np.int32)
+    p3 = np.arange(200, 208, dtype=np.int32)
+    cache.insert(p1, 4, state1)
+    cache.insert(p2, 4, state1)
+    assert cache.bytes == 80 and len(cache) == 2
+    cache.insert(p3, 4, state1)                # 120 > 100: evicts oldest
+    assert cache.bytes == 80 and len(cache) == 2
+    assert cache.lookup(p1)[1] is None         # p1 was LRU-evicted
+    assert cache.lookup(p3)[1] is not None
+    # oversized entries are refused outright
+    cache.insert(np.arange(300, 308, dtype=np.int32), 4,
+                 {"x": np.zeros(100, np.float32)})
+    assert cache.bytes == 80
+
+
+def test_prefix_cache_resume_is_strictly_shorter():
+    cache = PrefixCache(byte_budget=1 << 20, chunk=4)
+    p = np.arange(8, dtype=np.int32)
+    cache.insert(p, 8, {"x": np.zeros(2, np.float32)})
+    # a full-prompt snapshot must NOT be returned for the same prompt —
+    # at least one token has to run prefill to produce the first logits
+    m, state = cache.lookup(p)
+    assert (m, state) == (0, None)
+
+
+# ---------------------------------------------------------------------------
+# scheduler policies
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, plen, tick=0):
+    return Request(rid=rid, prompt=np.zeros(plen, np.int32),
+                   max_new_tokens=1, submit_tick=tick)
+
+
+def test_scheduler_fcfs_order():
+    s = Scheduler("fcfs")
+    for r in [_req(0, 5), _req(1, 50), _req(2, 10)]:
+        s.push(r)
+    assert [s.pop(0).rid for _ in range(3)] == [0, 1, 2]
+
+
+def test_scheduler_lpf_prefers_long_prompts():
+    s = Scheduler("lpf", max_wait=100)
+    for r in [_req(0, 5), _req(1, 50), _req(2, 10)]:
+        s.push(r)
+    assert [s.pop(0).rid for _ in range(3)] == [1, 2, 0]
+
+
+def test_scheduler_lpf_starvation_guard():
+    s = Scheduler("lpf", max_wait=10)
+    s.push(_req(0, 5, tick=0))        # short, would lose every lpf round
+    s.push(_req(1, 50, tick=9))
+    s.push(_req(2, 60, tick=9))
+    assert s.pop(9).rid == 2          # lpf still winning
+    assert s.pop(10).rid == 0         # rid 0 has starved past max_wait
+    assert s.pop(11).rid == 1
+
+
+def test_scheduler_rejects_unknown_policy():
+    with pytest.raises(ValueError):
+        Scheduler("priority")
+
+
+# ---------------------------------------------------------------------------
+# eos early stop
+# ---------------------------------------------------------------------------
+
+
+def _emitted_token(params, cfg, prompt):
+    """A token the model actually emits (so eos fires mid-generation)."""
+    toks = _ref(params, cfg, prompt, 4, 64)
+    return int(toks[1])
+
+
+def test_generate_eos_early_stop():
+    cfg, params = _setup("fastmax2-chunked")
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, 20).astype(np.int32)
+    eos = _emitted_token(params, cfg, prompt)
+    G = 8
+    free = _ref(params, cfg, prompt, G, 64)
+    stopped = _ref(params, cfg, prompt, G, 64, eos_id=eos)
+    k = int(np.argmax(free == eos))            # first eos position
+    np.testing.assert_array_equal(stopped[:k + 1], free[:k + 1])
+    assert (stopped[k:] == eos).all()          # frozen after eos
+
+
+def test_engine_eos_early_stop():
+    cfg, params = _setup("fastmax2-chunked")
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, 20).astype(np.int32)
+    eos = _emitted_token(params, cfg, prompt)
+    G = 8
+    free = _ref(params, cfg, prompt, G, 64)
+    k = int(np.argmax(free == eos))
+    eng = ServeEngine(params, cfg, max_slots=1, max_len=64, eos_id=eos)
+    rid = eng.submit(prompt, G)
+    outs = eng.run()
+    np.testing.assert_array_equal(outs[rid], free[:k + 1])  # ends at eos
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+
+
+def test_stream_yields_tokens_in_order():
+    cfg, params = _setup("fastmax2-chunked")
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab_size, 21).astype(np.int32)
+    G = 5
+    ref = _ref(params, cfg, prompt, G, 64)
+    eng = ServeEngine(params, cfg, max_slots=2, max_len=64)
+    got = list(eng.stream(prompt, G))
+    np.testing.assert_array_equal(np.asarray(got, np.int32), ref)
