@@ -1,7 +1,8 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-fast test-attention test-kernels test-shard test-serve \
-	dryrun-gate bench bench-json bench-serve ci-fast
+	dryrun-gate bench bench-json bench-serve bench-tpu ci-fast \
+	autotune autotune-check
 
 # full tier-1 suite (everything, incl. multi-minute subprocess compiles)
 test:
@@ -68,3 +69,20 @@ bench-json:
 # prints the same fail-soft >20% regression summary as bench-json
 bench-serve:
 	$(PY) -m benchmarks.serve_load --json BENCH_serve.json
+
+# real-hardware bench lane: same suite as bench-json but refuses to run
+# off-TPU, tunes on silicon (REPRO_AUTOTUNE=1 measures on cache miss), and
+# every kernel cell lands in BENCH_attention.json with hardware="tpu" +
+# its measured schedule — never compared against interpret cells
+bench-tpu:
+	REPRO_AUTOTUNE=1 $(PY) -m benchmarks.run --only attn_phases \
+		--json BENCH_attention.json --require-tpu
+
+# regenerate the committed autotune cache (deterministic cost-model
+# winners over the dryrun-gate + bench shapes) / check it is not stale —
+# the CI autotune job runs the check on every PR
+autotune:
+	$(PY) -m repro.kernels.autotune --write
+
+autotune-check:
+	$(PY) -m repro.kernels.autotune --check

@@ -49,6 +49,7 @@ mkq = lambda m: (jnp.asarray(rng.normal(size=(b, hq, m, d)), jnp.float32),
 q, k, v = mkq(n)
 q1, k1, v1 = mkq(1)
 mesh = make_test_mesh((2, 4), ("data", "model"))
+from repro.kernels import autotune
 res = {{}}
 with mesh:
     for key, env in (("decode_us", "1"), ("decode_jnp_us", "0")):
@@ -67,6 +68,9 @@ with mesh:
             o.block_until_ready()
             ts.append((time.perf_counter() - t0) / steps)
         res[key] = min(ts) * 1e6
+snap = autotune.snapshot_lookups()
+res["schedule"] = {{r["key"]: r["schedule"] for r in snap}}
+res["autotune_cache"] = {{r["key"]: r["cache"] for r in snap}}
 print(json.dumps(res))
 """
 
@@ -88,6 +92,7 @@ def _bench_tp_decode(*, quick: bool) -> dict:
     # so the regression check never compares it against a compiled-TPU
     # baseline (or vice versa)
     res["interpret"] = True
+    res["hardware"] = "cpu-interpret"
     return res
 
 
@@ -104,7 +109,9 @@ def _bench_spec(name: str, *, b, hq, hkv, n, d, dv, n_steps, iters):
     import jax.numpy as jnp
     from repro.attention import (AttentionSpec, attention, init_state,
                                  prefill, step)
+    from repro.kernels import autotune
 
+    autotune.clear_lookups()
     spec = AttentionSpec.parse(name)
     rng = np.random.default_rng(0)
     q, k, v = _mk(rng, b, hq, hkv, n, d, dv, jnp.float32)
@@ -125,11 +132,22 @@ def _bench_spec(name: str, *, b, hq, hkv, n, d, dv, n_steps, iters):
         argnums=(0, 1, 2)))
     t_backward = time_fn(lambda: grad_fn(q, k, v), iters=iters)
 
-    return {
+    res = {
         "prefill_us": t_prefill * 1e6,
         "decode_us": t_decode * 1e6,
         "backward_us": t_backward * 1e6,
     }
+    # schedule provenance (kernel cells only — the jnp/softmax suites make
+    # no kernel launches and record nothing): the chosen schedule per
+    # kernel launch, plus the autotune cache verdict, so perf regressions
+    # are attributable to schedule changes and the >20% rule never
+    # compares cross-schedule (benchmarks.common.regression_summary)
+    snap = autotune.snapshot_lookups()
+    if snap:
+        res["schedule"] = {r["key"]: r["schedule"] for r in snap}
+        res["autotune_cache"] = {r["key"]: r["cache"] for r in snap}
+        res["hardware"] = autotune.hardware_label()
+    return res
 
 
 def collect(quick: bool = True) -> dict:
@@ -140,23 +158,31 @@ def collect(quick: bool = True) -> dict:
              if quick else
              dict(b=2, hq=8, hkv=4, n=2048, d=64, dv=64, n_steps=8, iters=5))
     # exercise the native-state decode kernel (interpret off-TPU), not the
-    # jnp fallback — this suite tracks the kernel path
-    prev = os.environ.get("REPRO_DECODE_KERNEL")
+    # jnp fallback — this suite tracks the kernel path. The autotuner runs
+    # in `offline` mode unless the caller chose one: the committed cache +
+    # deterministic cost model pick every schedule (never timing Python
+    # loops mid-bench), and each cell records the schedule it ran.
+    prev = {var: os.environ.get(var)
+            for var in ("REPRO_DECODE_KERNEL", "REPRO_AUTOTUNE")}
     os.environ["REPRO_DECODE_KERNEL"] = "1"
+    os.environ.setdefault("REPRO_AUTOTUNE", "offline")
     try:
         suites = {name: _bench_spec(name, **shape) for name in SPECS}
+        # TP>1 decode: shard_map kernel vs the jnp feature-TP step
+        # (subprocess with 8 forced host devices — inherits the autotune
+        # env above so its shard-local lookups record provenance too;
+        # fail-soft so a broken child doesn't take the whole suite down)
+        try:
+            suites["fastmax2-kernel-tp4"] = _bench_tp_decode(quick=quick)
+        except Exception as e:  # noqa: BLE001
+            print(f"attn_phases: tp-decode cell skipped ({e})",
+                  file=sys.stderr)
     finally:
-        if prev is None:
-            os.environ.pop("REPRO_DECODE_KERNEL", None)
-        else:
-            os.environ["REPRO_DECODE_KERNEL"] = prev
-    # TP>1 decode: shard_map kernel vs the jnp feature-TP step (subprocess
-    # with 8 forced host devices; fail-soft so a broken child doesn't take
-    # the whole suite down)
-    try:
-        suites["fastmax2-kernel-tp4"] = _bench_tp_decode(quick=quick)
-    except Exception as e:  # noqa: BLE001
-        print(f"attn_phases: tp-decode cell skipped ({e})", file=sys.stderr)
+        for var, val in prev.items():
+            if val is None:
+                os.environ.pop(var, None)
+            else:
+                os.environ[var] = val
     # off-TPU the Pallas suites run interpret-mode kernel bodies: label the
     # cells so the regression check only ever compares like with like
     # (interpret timings are Python-loop-bound and NOT comparable to either

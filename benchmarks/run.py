@@ -18,42 +18,7 @@ import os
 import sys
 import time
 
-REGRESSION_THRESHOLD = 1.20
-
-
-def _regression_summary(baseline: dict, fresh: dict) -> str:
-    """One line comparing fresh phase timings to the committed baseline.
-
-    Only `*_us` keys are timings; other cell keys are annotations. A cell
-    whose `interpret` label differs from the baseline's is skipped: an
-    interpret-mode (forced-host-device / off-TPU Pallas) timing is never
-    comparable to a compiled one, whatever `meta.platform` says — the TP
-    subprocess cell is interpret even on a TPU host.
-    """
-    if baseline.get("meta", {}).get("platform") != \
-            fresh.get("meta", {}).get("platform") or \
-            baseline.get("meta", {}).get("quick") != \
-            fresh.get("meta", {}).get("quick"):
-        return ("bench-json: baseline platform/mode differs — regression "
-                "check skipped")
-    slow, skipped = [], []
-    for suite, phases in fresh.get("suites", {}).items():
-        base_p = baseline.get("suites", {}).get(suite, {})
-        if base_p.get("interpret") != phases.get("interpret"):
-            skipped.append(suite)
-            continue
-        for phase, us in phases.items():
-            if not phase.endswith("_us"):
-                continue
-            b = base_p.get(phase)
-            if b and us > b * REGRESSION_THRESHOLD:
-                slow.append(f"{suite}/{phase[:-3]} {b:.0f}->{us:.0f}us")
-    note = (f" (skipped interpret-label mismatch: {', '.join(skipped)})"
-            if skipped else "")
-    if slow:
-        return ("bench-json: WARNING — >20% slower than baseline: "
-                + "; ".join(slow) + note)
-    return f"bench-json: OK (no >20% regressions vs baseline){note}"
+from benchmarks.common import regression_summary
 
 
 def main() -> None:
@@ -68,8 +33,20 @@ def main() -> None:
                          "structured results (default BENCH_attention.json);"
                          " prints a fail-soft regression summary against "
                          "the existing file")
+    ap.add_argument("--require-tpu", action="store_true",
+                    help="abort unless running on real TPU silicon — the "
+                         "`make bench-tpu` lane, so compiled-hardware "
+                         "numbers never get recorded from an interpret-"
+                         "mode host by accident")
     args = ap.parse_args()
     quick = not args.full
+
+    if args.require_tpu:
+        import jax
+        if jax.default_backend() != "tpu":
+            sys.exit("bench: --require-tpu but jax.default_backend() is "
+                     f"{jax.default_backend()!r} — run this lane on a TPU "
+                     "host (the CPU lane is `make bench-json`)")
 
     from benchmarks import (attention_phases, fig2_dropout, fig3_scaling,
                             fig4_attnmap, fig6_loss, serve_load,
@@ -111,7 +88,8 @@ def main() -> None:
             try:
                 with open(args.json) as f:
                     baseline = json.load(f)
-                print(_regression_summary(baseline, fresh), flush=True)
+                print(regression_summary(baseline, fresh, "bench-json"),
+                      flush=True)
             except (json.JSONDecodeError, OSError) as e:
                 print(f"bench-json: baseline unreadable ({e}) — skipping "
                       f"regression check", file=sys.stderr)

@@ -157,11 +157,12 @@ def main() -> None:
     for row in rows(fresh):
         print(row, flush=True)
     if args.json:
-        from benchmarks.run import _regression_summary
+        from benchmarks.common import regression_summary
         if os.path.exists(args.json):
             try:
                 with open(args.json) as f:
-                    print(_regression_summary(json.load(f), fresh),
+                    print(regression_summary(json.load(f), fresh,
+                                             "bench-serve"),
                           flush=True)
             except (json.JSONDecodeError, OSError) as e:
                 print(f"bench-serve: baseline unreadable ({e}) — skipping "

@@ -166,7 +166,7 @@ def _causal_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("p", "chunk_size", "denom_eps", "interpret", "out_dtype",
-                     "return_state", "blk"),
+                     "return_state", "blk", "bm", "grid"),
 )
 def fastmax_causal_pallas(
     q: jnp.ndarray,  # [B, Hq, N, D]  (pre-normalized q̂)
@@ -181,6 +181,8 @@ def fastmax_causal_pallas(
     out_dtype=None,
     return_state: bool = False,
     blk: int | None = None,
+    bm: int | None = None,
+    grid: str | None = None,
 ):
     """Causal fastmax. With `return_state=True` additionally returns the
     final moment carry as a tuple (m0, m1, m2, g0, g1, g2) with shapes
@@ -190,7 +192,11 @@ def fastmax_causal_pallas(
 
     `blk` is the Dv carry-block width (must divide Dv); None picks the
     largest divisor whose degree-2 scratch tuple fits `FWD_BLK_BUDGET`
-    (nb = Dv/blk = 1 below 128×128 heads — the unblocked schedule)."""
+    (nb = Dv/blk = 1 below 128×128 heads — the unblocked schedule).
+    `bm` is the m-major row block (must divide D; None → `pick_bm`).
+    `grid` selects the dimension semantics of the INDEPENDENT grid axes:
+    "parallel" (None; megacore may split them) or "arbitrary" (sequential
+    single-core sweep) — the autotuner's schedule knobs."""
     b, hq, n, d = q.shape
     hkv = k.shape[1]
     dv = v.shape[-1]
@@ -215,11 +221,19 @@ def fastmax_causal_pallas(
         w = jnp.broadcast_to(kv_mask.astype(acc), (b, hkv, n))
     w = jnp.pad(w, ((0, 0), (0, 0), (0, pad))).reshape(b * hkv, nc * cs)
 
-    bm = pick_bm(d)
+    if bm is None:
+        bm = pick_bm(d)
+    if d % bm:
+        raise ValueError(f"bm={bm} must divide D={d}")
     if blk is None:
         blk = pick_blk(d, dv, FWD_BLK_BUDGET)
     if dv % blk:
         raise ValueError(f"blk={blk} must divide Dv={dv}")
+    if grid is None:
+        grid = "parallel"
+    if grid not in ("parallel", "arbitrary"):
+        raise ValueError(f"grid={grid!r}; expected 'parallel'|'arbitrary'")
+    par = "parallel" if grid == "parallel" else "arbitrary"
     nb = dv // blk
     kernel = functools.partial(_causal_kernel, p=p, bm=bm, denom_eps=denom_eps,
                                acc=acc, emit_state=return_state)
@@ -270,10 +284,9 @@ def fastmax_causal_pallas(
         # aliasing an output window across a "parallel" grid dim is
         # undefined on megacore (two cores would DMA it concurrently).
         # Without state outputs every block writes disjoint o slices, so
-        # nb stays parallel.
+        # nb follows the schedule's `grid` knob.
         compiler_params=tpu_compiler_params(
-            ("parallel", "arbitrary" if return_state else "parallel",
-             "arbitrary")),
+            (par, "arbitrary" if return_state else par, "arbitrary")),
         interpret=interpret,
         name=f"fastmax_causal_p{p}",
     )(qp, kp, vp, w)

@@ -247,7 +247,8 @@ def _causal_bwd_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("p", "chunk_size", "denom_eps", "interpret", "blk"),
+    static_argnames=("p", "chunk_size", "denom_eps", "interpret", "blk",
+                     "bm", "grid"),
 )
 def fastmax_causal_bwd_pallas(
     q: jnp.ndarray,   # [B, Hq, N, D]   (pre-normalized q̂, as in the fwd)
@@ -262,6 +263,8 @@ def fastmax_causal_bwd_pallas(
     denom_eps: float = 1e-6,
     interpret: bool = False,
     blk: int | None = None,
+    bm: int | None = None,
+    grid: str | None = None,
 ):
     """Returns (dq, dk, dv) in the input dtypes.
 
@@ -270,7 +273,10 @@ def fastmax_causal_bwd_pallas(
     `BWD_BLK_BUDGET` each — nb = Dv/blk = 1 (the unblocked schedule) up to
     64×64 heads, nb = 2 at 128×128. Feature-TP callers pass their LOCAL Dv
     shard; the emitted dq/dk are then the shard's partials (psummed once
-    per launch by `repro.kernels.sharded`).
+    per launch by `repro.kernels.sharded`). `bm` (m-major row block, must
+    divide D) and `grid` ("parallel"|"arbitrary" for the independent grid
+    axes) are the autotuner's remaining schedule knobs; None keeps the
+    untuned defaults.
     """
     b, hq, n, d = q.shape
     hkv = k.shape[1]
@@ -304,11 +310,19 @@ def fastmax_causal_bwd_pallas(
     fg1 = g1.reshape(bh, 1, d).astype(acc)
     fg2 = g2.reshape(bh, d, d).astype(acc)
 
-    bm = pick_bm(d)
+    if bm is None:
+        bm = pick_bm(d)
+    if d % bm:
+        raise ValueError(f"bm={bm} must divide D={d}")
     if blk is None:
         blk = pick_blk(d, dv, BWD_BLK_BUDGET)
     if dv % blk:
         raise ValueError(f"blk={blk} must divide Dv={dv}")
+    if grid is None:
+        grid = "parallel"
+    if grid not in ("parallel", "arbitrary"):
+        raise ValueError(f"grid={grid!r}; expected 'parallel'|'arbitrary'")
+    par = "parallel" if grid == "parallel" else "arbitrary"
     nb = dv // blk
     kernel = functools.partial(_causal_bwd_kernel, p=p, bm=bm,
                                denom_eps=denom_eps, acc=acc)
@@ -363,8 +377,7 @@ def fastmax_causal_bwd_pallas(
             pltpu.VMEM((1, d), acc),
             pltpu.VMEM((d, d), acc),
         ],
-        compiler_params=tpu_compiler_params(
-            ("parallel", "parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params((par, par, "arbitrary")),
         interpret=interpret,
         name=f"fastmax_causal_bwd_p{p}",
     )(qp, kp, vp, w, dop, fm0, fm1, fm2, fg0, fg1, fg2)

@@ -75,7 +75,8 @@ def _decode_kernel(q_ref, k_ref, v_ref,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("p", "denom_eps", "interpret", "out_dtype")
+    jax.jit, static_argnames=("p", "denom_eps", "interpret", "out_dtype",
+                              "bm", "grid")
 )
 def fastmax_decode_pallas(
     q: jnp.ndarray,   # [B, Hq, 1, D]   pre-normalized q̂ of the new token
@@ -88,6 +89,8 @@ def fastmax_decode_pallas(
     denom_eps: float = 1e-6,
     interpret: bool = False,
     out_dtype=None,
+    bm: int | None = None,
+    grid: str | None = None,
 ):
     b, hq, _, d = q.shape
     hkv = k.shape[1]
@@ -111,7 +114,14 @@ def fastmax_decode_pallas(
     g1r = g1.reshape(bh, 1, d).astype(acc)
     g2r = g2.reshape(bh, d, d).astype(acc)
 
-    bm = pick_bm(d)
+    if bm is None:
+        bm = pick_bm(d)
+    if d % bm:
+        raise ValueError(f"bm={bm} must divide D={d}")
+    if grid is None:
+        grid = "parallel"
+    if grid not in ("parallel", "arbitrary"):
+        raise ValueError(f"grid={grid!r}; expected 'parallel'|'arbitrary'")
     nmb = d // bm if p >= 2 else 1
     m2_rows = bm * d if p >= 2 else 1
 
@@ -156,7 +166,9 @@ def fastmax_decode_pallas(
             pltpu.VMEM((g, 1), acc),
         ],
         input_output_aliases={3: 1, 4: 2, 5: 3, 6: 4, 7: 5, 8: 6},
-        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
+        # the head axis follows the schedule's `grid` knob; the m-block
+        # axis is the sequential m2 stream (carries acc/den scratch)
+        compiler_params=tpu_compiler_params((grid, "arbitrary")),
         interpret=interpret,
         name=f"fastmax_decode_p{p}",
     )(qr, kr, vr, m0r, m1r, m2r, g0r, g1r, g2r)

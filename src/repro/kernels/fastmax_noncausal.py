@@ -107,7 +107,8 @@ def _combine_kernel(q_ref, m0_ref, m1_ref, m2_ref, g0_ref, g1_ref, g2_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("p", "chunk_size", "denom_eps", "interpret", "out_dtype"),
+    static_argnames=("p", "chunk_size", "denom_eps", "interpret", "out_dtype",
+                     "bm", "grid"),
 )
 def fastmax_noncausal_pallas(
     q: jnp.ndarray,  # [B, Hq, N, D]   (pre-normalized q̂)
@@ -119,6 +120,8 @@ def fastmax_noncausal_pallas(
     denom_eps: float = 1e-6,
     interpret: bool = False,
     out_dtype=None,
+    bm: int | None = None,
+    grid: str | None = None,
 ) -> jnp.ndarray:
     b, hq, n, d = q.shape
     hkv, m = k.shape[1], k.shape[2]
@@ -142,7 +145,14 @@ def fastmax_noncausal_pallas(
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, padq), (0, 0))).reshape(
         b, hkv, g, nqc * cq, d).reshape(b * hkv, g, nqc * cq, d)
 
-    bm = pick_bm(d)
+    if bm is None:
+        bm = pick_bm(d)
+    if d % bm:
+        raise ValueError(f"bm={bm} must divide D={d}")
+    if grid is None:
+        grid = "parallel"
+    if grid not in ("parallel", "arbitrary"):
+        raise ValueError(f"grid={grid!r}; expected 'parallel'|'arbitrary'")
     nmb = d // bm if p >= 2 else 1
     m2_rows = bm * d if p >= 2 else 1
 
@@ -172,7 +182,7 @@ def fastmax_noncausal_pallas(
             jax.ShapeDtypeStruct((b * hkv, d, d), acc),
         ],
         compiler_params=tpu_compiler_params(
-            ("parallel", "arbitrary", "arbitrary")),
+            (grid, "arbitrary", "arbitrary")),
         interpret=interpret,
         name=f"fastmax_moments_p{p}",
     )(kp, vp, w)
@@ -197,8 +207,7 @@ def fastmax_noncausal_pallas(
             pltpu.VMEM((g * cq, dv), acc),
             pltpu.VMEM((g * cq, 1), acc),
         ],
-        compiler_params=tpu_compiler_params(
-            ("parallel", "parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params((grid, grid, "arbitrary")),
         interpret=interpret,
         name=f"fastmax_combine_p{p}",
     )(qp, m0, m1, m2, g0, g1, g2)

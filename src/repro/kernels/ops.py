@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fastmax as _fm
+from repro.kernels import autotune as _at
 from repro.kernels.fastmax_causal import fastmax_causal_pallas
 from repro.kernels.fastmax_causal_bwd import fastmax_causal_bwd_pallas
 from repro.kernels.fastmax_decode import fastmax_decode_pallas
@@ -36,27 +37,58 @@ def use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _lookup(kernel: str, q, k, v, p: int, chunk_size: int):
+    """Autotune lookup at trace time (shapes are concrete); returns None
+    when REPRO_AUTOTUNE is off — the kernels then use their own pick_*
+    defaults, byte-identical to an autotune-free build."""
+    return _at.lookup_schedule(
+        kernel, n=q.shape[2], d=q.shape[3], dv=v.shape[-1],
+        g=q.shape[1] // k.shape[1], p=p, dtype=q.dtype,
+        chunk_size=chunk_size)
+
+
+def _causal_kwargs(sched, chunk_size: int) -> dict:
+    """Schedule → fastmax_causal(_bwd)_pallas kwargs ({} keeps defaults)."""
+    if sched is None:
+        return {"chunk_size": chunk_size}
+    return {"chunk_size": sched.chunk_size, "bm": sched.bm,
+            "blk": sched.blk, "grid": sched.grid}
+
+
+def _nc_kwargs(sched, chunk_size: int) -> dict:
+    if sched is None:
+        return {"chunk_size": chunk_size}
+    return {"chunk_size": sched.chunk_size, "bm": sched.bm,
+            "grid": sched.grid}
+
+
 def use_pallas_bwd() -> bool:
     """Backward schedule: the fused Pallas kernel unless REPRO_FASTMAX_BWD
     selects the jnp §2.5 chunked scan (the equivalence oracle)."""
     return os.environ.get("REPRO_FASTMAX_BWD", "pallas").lower() != "jnp"
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _fastmax_causal_trainable(q, k, v, p, chunk_size, denom_eps, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _fastmax_causal_trainable(q, k, v, p, chunk_size, denom_eps, interpret,
+                              sched_fwd, sched_bwd):
+    # sched_fwd/sched_bwd are hashable Schedule records (or None for the
+    # untuned defaults) — static nondiff args so fwd and bwd each run
+    # their OWN tuned schedule (the moments are plain sums, so the two
+    # sides may chunk/block the sequence independently)
     return fastmax_causal_pallas(
-        q, k, v, p=p, chunk_size=chunk_size, denom_eps=denom_eps,
-        interpret=interpret)
+        q, k, v, p=p, denom_eps=denom_eps, interpret=interpret,
+        **_causal_kwargs(sched_fwd, chunk_size))
 
 
-def _fc_fwd(q, k, v, p, chunk_size, denom_eps, interpret):
+def _fc_fwd(q, k, v, p, chunk_size, denom_eps, interpret, sched_fwd,
+            sched_bwd):
     # the forward kernel emits its own final carry (m-major moments) — the
     # only residual the reversible backward needs beyond (q, k, v):
     # O(D^{p+1}) bytes, and no extra jnp pass over the full sequence (the
     # former `compute_moments` call here spiked peak memory at long N).
     o, state = fastmax_causal_pallas(
-        q, k, v, p=p, chunk_size=chunk_size, denom_eps=denom_eps,
-        interpret=interpret, return_state=True)
+        q, k, v, p=p, denom_eps=denom_eps, interpret=interpret,
+        return_state=True, **_causal_kwargs(sched_fwd, chunk_size))
     if p < 2:
         # don't hold the [B,Hkv,D,D,Dv] zeros placeholder live as a
         # residual — at p=1 both backwards ignore/rebuild it
@@ -64,14 +96,17 @@ def _fc_fwd(q, k, v, p, chunk_size, denom_eps, interpret):
     return o, (q, k, v, state)
 
 
-def _fc_bwd(p, chunk_size, denom_eps, interpret, res, do):
+def _fc_bwd(p, chunk_size, denom_eps, interpret, sched_fwd, sched_bwd, res,
+            do):
     q, k, v, state = res
     return fastmax_bwd(q, k, v, state, do, p=p, chunk_size=chunk_size,
-                       denom_eps=denom_eps, interpret=interpret)
+                       denom_eps=denom_eps, interpret=interpret,
+                       schedule=sched_bwd)
 
 
 def fastmax_bwd(q, k, v, state, do, *, p: int = 2, chunk_size: int = 128,
-                denom_eps: float = 1e-6, interpret: bool | None = None):
+                denom_eps: float = 1e-6, interpret: bool | None = None,
+                schedule=None):
     """Causal fastmax backward on the kernel-emitted final carry.
 
     Returns (dq, dk, dv). The Dv-blocked fused Pallas kernel by default;
@@ -89,9 +124,11 @@ def fastmax_bwd(q, k, v, state, do, *, p: int = 2, chunk_size: int = 128,
     if interpret is None:
         interpret = use_interpret()
     if use_pallas_bwd():
+        if schedule is None:
+            schedule = _lookup("causal_bwd", q, k, v, p, chunk_size)
         return fastmax_causal_bwd_pallas(
-            q, k, v, state, do, p=p, chunk_size=chunk_size,
-            denom_eps=denom_eps, interpret=interpret)
+            q, k, v, state, do, p=p, denom_eps=denom_eps,
+            interpret=interpret, **_causal_kwargs(schedule, chunk_size))
     # jnp oracle: the §2.5 chunked reverse scan on the same kernel-emitted
     # carry (kept for equivalence testing and as an escape hatch)
     if state[2] is None or p < 2:
@@ -115,21 +152,33 @@ def fastmax(
     chunk_size: int = 128,
     denom_eps: float = 1e-6,
     interpret: bool | None = None,
+    schedule=None,
 ) -> jnp.ndarray:
-    """Kernel-backed fastmax on pre-normalized q̂/k̂ (GQA-aware)."""
+    """Kernel-backed fastmax on pre-normalized q̂/k̂ (GQA-aware).
+
+    `schedule` forces one `autotune.Schedule` on every launch (tests);
+    None consults the autotuner per kernel — which itself returns None
+    (the untuned `pick_*` defaults) unless REPRO_AUTOTUNE enables it.
+    """
     if interpret is None:
         interpret = use_interpret()
     if causal:
+        sf = schedule if schedule is not None else _lookup(
+            "causal_fwd", q, k, v, p, chunk_size)
+        sb = schedule if schedule is not None else _lookup(
+            "causal_bwd", q, k, v, p, chunk_size)
         return _fastmax_causal_trainable(
-            q, k, v, p, chunk_size, denom_eps, interpret)
+            q, k, v, p, chunk_size, denom_eps, interpret, sf, sb)
+    if schedule is None:
+        schedule = _lookup("noncausal", q, k, v, p, chunk_size)
     return fastmax_noncausal_pallas(
-        q, k, v, p=p, chunk_size=chunk_size, denom_eps=denom_eps,
-        interpret=interpret)
+        q, k, v, p=p, denom_eps=denom_eps, interpret=interpret,
+        **_nc_kwargs(schedule, chunk_size))
 
 
 def fastmax_prefill_kernel(
     q, k, v, *, p: int = 2, chunk_size: int = 128, denom_eps: float = 1e-6,
-    kv_mask=None, interpret: bool | None = None,
+    kv_mask=None, interpret: bool | None = None, schedule=None,
 ):
     """Kernel-backed causal prefill on pre-normalized q̂/k̂ (distinct from
     the jnp `repro.core.decode_state.fastmax_prefill`, which normalizes
@@ -141,17 +190,24 @@ def fastmax_prefill_kernel(
     """
     if interpret is None:
         interpret = use_interpret()
+    if schedule is None:
+        schedule = _lookup("causal_fwd", q, k, v, p, chunk_size)
     return fastmax_causal_pallas(
-        q, k, v, kv_mask, p=p, chunk_size=chunk_size, denom_eps=denom_eps,
-        interpret=interpret, return_state=True)
+        q, k, v, kv_mask, p=p, denom_eps=denom_eps, interpret=interpret,
+        return_state=True, **_causal_kwargs(schedule, chunk_size))
 
 
 def fastmax_decode(
     q, k, v, state, *, p: int = 2, denom_eps: float = 1e-6,
-    interpret: bool | None = None,
+    interpret: bool | None = None, schedule=None,
 ):
     """Kernel-backed single-token decode step on moment-tuple state."""
     if interpret is None:
         interpret = use_interpret()
+    if schedule is None:
+        schedule = _lookup("decode", q, k, v, p, 128)
+    dk = {} if schedule is None else {"bm": schedule.bm,
+                                      "grid": schedule.grid}
     return fastmax_decode_pallas(
-        q, k, v, tuple(state), p=p, denom_eps=denom_eps, interpret=interpret)
+        q, k, v, tuple(state), p=p, denom_eps=denom_eps, interpret=interpret,
+        **dk)

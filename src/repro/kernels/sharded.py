@@ -131,7 +131,7 @@ def _moment_specs(plan: ShardPlan):
 
 
 def fastmax_sharded(q, k, v, *, p: int, causal: bool, chunk_size: int,
-                    denom_eps: float, plan: ShardPlan):
+                    denom_eps: float, plan: ShardPlan, schedule=None):
     """shard_map-wrapped TRAINABLE kernel attention.
 
     heads mode: autodiff of the shard_map applies the per-shard custom_vjp,
@@ -141,6 +141,10 @@ def fastmax_sharded(q, k, v, *, p: int, causal: bool, chunk_size: int,
     emits the Dv-sharded outputs + moment carry collective-free, backward
     launches the blocked kernel on each shard's (v, do, m-moments) slice
     and psums the partial dq/dk once per launch (see module docstring).
+
+    `schedule` (an `autotune.Schedule` or None) forces one schedule on
+    every per-shard launch; None lets the in-body autotune lookup key on
+    the SHARD-LOCAL shapes — the ones the per-device kernels actually run.
     """
     if plan.mode == "heads":
         from repro.kernels import ops as kernel_ops
@@ -151,7 +155,8 @@ def fastmax_sharded(q, k, v, *, p: int, causal: bool, chunk_size: int,
         def body(q, k, v):
             return kernel_ops.fastmax(q, k, v, p=p, causal=causal,
                                       chunk_size=chunk_size,
-                                      denom_eps=denom_eps)
+                                      denom_eps=denom_eps,
+                                      schedule=schedule)
 
         return shard_map(
             body, mesh=plan.mesh,
@@ -163,10 +168,11 @@ def fastmax_sharded(q, k, v, *, p: int, causal: bool, chunk_size: int,
         raise ValueError(
             "feature-mode trainable shard_map is causal-only; route "
             "noncausal feature-TP attention to the chunked scan")
-    return _feature_trainable(q, k, v, p, chunk_size, denom_eps, plan)
+    return _feature_trainable(q, k, v, p, chunk_size, denom_eps, plan,
+                              schedule)
 
 
-def _feature_fwd_launch(q, k, v, p, chunk_size, denom_eps, plan):
+def _feature_fwd_launch(q, k, v, p, chunk_size, denom_eps, plan, schedule):
     """Forward launch of the feature-mode trainable: (o, final carry).
 
     One shard_map of the state-emitting causal kernel: v and the emitted
@@ -182,7 +188,8 @@ def _feature_fwd_launch(q, k, v, p, chunk_size, denom_eps, plan):
 
     def body(q, k, v):
         return kernel_ops.fastmax_prefill_kernel(
-            q, k, v, p=p, chunk_size=chunk_size, denom_eps=denom_eps)
+            q, k, v, p=p, chunk_size=chunk_size, denom_eps=denom_eps,
+            schedule=schedule)
 
     return shard_map(
         body, mesh=plan.mesh,
@@ -192,8 +199,8 @@ def _feature_fwd_launch(q, k, v, p, chunk_size, denom_eps, plan):
     )(q, k, v)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _feature_trainable(q, k, v, p, chunk_size, denom_eps, plan):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _feature_trainable(q, k, v, p, chunk_size, denom_eps, plan, schedule):
     # primal (non-differentiated calls): the STATELESS kernel — no carry
     # DMA'd to HBM and the forward's nb grid axis stays parallel; only the
     # vjp forward below pays for state emission (it IS the residual)
@@ -205,7 +212,7 @@ def _feature_trainable(q, k, v, p, chunk_size, denom_eps, plan):
     def body(q, k, v):
         return kernel_ops.fastmax(q, k, v, p=p, causal=True,
                                   chunk_size=chunk_size,
-                                  denom_eps=denom_eps)
+                                  denom_eps=denom_eps, schedule=schedule)
 
     return shard_map(
         body, mesh=plan.mesh,
@@ -215,15 +222,16 @@ def _feature_trainable(q, k, v, p, chunk_size, denom_eps, plan):
     )(q, k, v)
 
 
-def _ft_fwd(q, k, v, p, chunk_size, denom_eps, plan):
-    o, state = _feature_fwd_launch(q, k, v, p, chunk_size, denom_eps, plan)
+def _ft_fwd(q, k, v, p, chunk_size, denom_eps, plan, schedule):
+    o, state = _feature_fwd_launch(q, k, v, p, chunk_size, denom_eps, plan,
+                                   schedule)
     if p < 2:
         # don't hold the [B,Hkv,D,D,Dv] zeros placeholder live as a residual
         state = state[:2] + (None,) + state[3:]
     return o, (q, k, v, tuple(state))
 
 
-def _ft_bwd(p, chunk_size, denom_eps, plan, res, do):
+def _ft_bwd(p, chunk_size, denom_eps, plan, schedule, res, do):
     q, k, v, state = res
     from repro.kernels import ops as kernel_ops
 
@@ -246,7 +254,7 @@ def _ft_bwd(p, chunk_size, denom_eps, plan, res, do):
         # (fastmax_bwd docstring), its dv the shard's exact slice
         dq, dk, dv = kernel_ops.fastmax_bwd(
             q, k, v, tuple(state), do, p=p, chunk_size=chunk_size,
-            denom_eps=denom_eps)
+            denom_eps=denom_eps, schedule=schedule)
         dq = jax.lax.psum(dq, "model")
         dk = jax.lax.psum(dk, "model")
         return dq, dk, dv
@@ -265,7 +273,7 @@ _feature_trainable.defvjp(_ft_fwd, _ft_bwd)
 
 def fastmax_prefill_sharded(q, k, v, *, p: int, chunk_size: int,
                             denom_eps: float, kv_mask=None,
-                            plan: ShardPlan):
+                            plan: ShardPlan, schedule=None):
     """shard_map-wrapped causal prefill kernel: (o, final moment tuple).
 
     heads mode: everything head-local. feature mode: v and the m-moments
@@ -294,7 +302,7 @@ def fastmax_prefill_sharded(q, k, v, *, p: int, chunk_size: int,
         mask = rest[0] if rest else None
         return kernel_ops.fastmax_prefill_kernel(
             q, k, v, p=p, chunk_size=chunk_size, denom_eps=denom_eps,
-            kv_mask=mask)
+            kv_mask=mask, schedule=schedule)
 
     return shard_map(
         body, mesh=plan.mesh,
@@ -305,7 +313,7 @@ def fastmax_prefill_sharded(q, k, v, *, p: int, chunk_size: int,
 
 
 def fastmax_decode_sharded(q, k, v, state, *, p: int, denom_eps: float,
-                           plan: ShardPlan):
+                           plan: ShardPlan, schedule=None):
     """shard_map-wrapped fused decode step: (o, new moment tuple).
 
     The serving hot loop at TP > 1: per step each device streams only ITS
@@ -320,7 +328,8 @@ def fastmax_decode_sharded(q, k, v, state, *, p: int, denom_eps: float,
 
     def body(q, k, v, *state):
         return kernel_ops.fastmax_decode(q, k, v, tuple(state), p=p,
-                                         denom_eps=denom_eps)
+                                         denom_eps=denom_eps,
+                                         schedule=schedule)
 
     return shard_map(
         body, mesh=plan.mesh,

@@ -24,13 +24,19 @@ Two independent blockings of the degree-2 moment `m2 [D·D, Dv]` (m-major):
   single tuple, 1M (4 MB each, 8 MB for the pair) for the backward — so
   128×128 heads train with nb_fwd = 1, nb_bwd = 2, and small heads keep
   nb = 1 (the unblocked schedule, bit-identical to before).
+
+Both pickers are the UNTUNED defaults: the schedule autotuner
+(`repro.kernels.autotune`) sweeps bm/blk (among other knobs) per shape and
+overrides them when enabled; it also calls these per candidate inside the
+sweep loop, so they enumerate divisors in O(sqrt(d)) instead of scanning
+every integer up to d.
 """
 from __future__ import annotations
 
 import functools
 
-__all__ = ["pick_bm", "pick_blk", "KERNEL_BM_BUDGET", "SCAN_BM_BUDGET",
-           "FWD_BLK_BUDGET", "BWD_BLK_BUDGET"]
+__all__ = ["pick_bm", "pick_blk", "divisors", "KERNEL_BM_BUDGET",
+           "SCAN_BM_BUDGET", "FWD_BLK_BUDGET", "BWD_BLK_BUDGET"]
 
 KERNEL_BM_BUDGET = 512   # Pallas VMEM tiles
 SCAN_BM_BUDGET = 2048    # jnp chunked-scan intermediates
@@ -40,12 +46,35 @@ BWD_BLK_BUDGET = 1 << 20   # f32 words per tuple (carry + cotangent pair)
 
 
 @functools.lru_cache(maxsize=None)
+def divisors(n: int) -> tuple:
+    """All divisors of `n`, ascending (n >= 1)."""
+    if not isinstance(n, int) or n < 1:
+        raise ValueError(f"divisors() needs a positive int, got {n!r}")
+    small, large = [], []
+    i = 1
+    while i * i <= n:
+        if n % i == 0:
+            small.append(i)
+            if i != n // i:
+                large.append(n // i)
+        i += 1
+    return tuple(small + large[::-1])
+
+
+def _check_budget(budget) -> int:
+    if not isinstance(budget, int) or budget < 1:
+        raise ValueError(f"budget must be a positive int, got {budget!r}")
+    return budget
+
+
+@functools.lru_cache(maxsize=None)
 def pick_bm(d: int, budget: int = KERNEL_BM_BUDGET) -> int:
     """Largest divisor of `d` with bm*d <= budget (always >= 1)."""
+    _check_budget(budget)
     best = 1
-    for bm in range(1, d + 1):
-        if d % bm == 0 and bm * d <= budget:
-            best = bm
+    for bm in divisors(d):
+        if bm * d <= budget:
+            best = bm   # divisors ascend, so the last feasible is largest
     return best
 
 
@@ -57,8 +86,11 @@ def pick_blk(d: int, dv: int, budget: int = FWD_BLK_BUDGET) -> int:
     is d*d*blk f32 words per grid program. blk == dv means nb == 1 — the
     unblocked schedule.
     """
+    _check_budget(budget)
+    if not isinstance(d, int) or d < 1:
+        raise ValueError(f"d must be a positive int, got {d!r}")
     best = 1
-    for blk in range(1, dv + 1):
-        if dv % blk == 0 and d * d * blk <= budget:
+    for blk in divisors(dv):
+        if d * d * blk <= budget:
             best = blk
     return best

@@ -145,9 +145,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     # record this cell's attention routing decisions (the _log_once lines:
     # backend reroutes, kernel shard_map plans, jnp fallbacks) so the
-    # result JSON is machine-checkable (--assert-kernel-route)
+    # result JSON is machine-checkable (--assert-kernel-route), and the
+    # autotune lookups so the result also pins WHICH kernel schedule each
+    # launch traced with (cache hit/miss next to attn_routing)
     from repro.attention.registry import _LOGGED
+    from repro.kernels import autotune
     _LOGGED.clear()
+    autotune.clear_lookups()
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
@@ -278,6 +282,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         "arch": arch, "shape": shape_name, "kind": shape.kind,
         "xla_remat": xla_diag.get("xla_remat", {"count": 0, "lines": []}),
         "attn_routing": sorted(_LOGGED),
+        "attn_schedule": autotune.snapshot_lookups(),
         "mesh": "2x16x16" if multi_pod else "16x16",
         "n_chips": int(n_chips),
         "attn_backend": cfg.attn.legacy_name,   # result-JSON back-compat key

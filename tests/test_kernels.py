@@ -165,11 +165,11 @@ def test_blocked_bwd_128x128_parity(monkeypatch, dtype, tol):
     rng = np.random.default_rng(41)
     q, k, v = mk(rng, 1, 2, 1, 64, d, dv, dtype)
     do = jnp.asarray(rng.normal(size=(1, 2, 64, dv)), dtype)
-    _, res = ops._fc_fwd(q, k, v, 2, 32, 1e-6, True)
+    _, res = ops._fc_fwd(q, k, v, 2, 32, 1e-6, True, None, None)
     assert ops.use_pallas_bwd()
-    g_pallas = ops._fc_bwd(2, 32, 1e-6, True, res, do)
+    g_pallas = ops._fc_bwd(2, 32, 1e-6, True, None, None, res, do)
     monkeypatch.setenv("REPRO_FASTMAX_BWD", "jnp")
-    g_jnp = ops._fc_bwd(2, 32, 1e-6, True, res, do)
+    g_jnp = ops._fc_bwd(2, 32, 1e-6, True, None, None, res, do)
     for a, b in zip(g_pallas, g_jnp):
         a = np.asarray(a, np.float64)
         b = np.asarray(b, np.float64)
@@ -221,12 +221,12 @@ def test_jnp_bwd_oracle_stays_wired(monkeypatch):
     rng = np.random.default_rng(21)
     q, k, v = mk(rng, 1, 2, 1, 32, 8, 8, jnp.float64)
     do = jnp.asarray(rng.normal(size=(1, 2, 32, 8)), jnp.float64)
-    _, res = ops._fc_fwd(q, k, v, 2, 16, 1e-6, True)
+    _, res = ops._fc_fwd(q, k, v, 2, 16, 1e-6, True, None, None)
     assert ops.use_pallas_bwd()
-    g_pallas = ops._fc_bwd(2, 16, 1e-6, True, res, do)
+    g_pallas = ops._fc_bwd(2, 16, 1e-6, True, None, None, res, do)
     monkeypatch.setenv("REPRO_FASTMAX_BWD", "jnp")
     assert not ops.use_pallas_bwd()
-    g_jnp = ops._fc_bwd(2, 16, 1e-6, True, res, do)
+    g_jnp = ops._fc_bwd(2, 16, 1e-6, True, None, None, res, do)
     for a, b in zip(g_pallas, g_jnp):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-8, atol=1e-10)
