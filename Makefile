@@ -1,7 +1,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-fast test-attention test-kernels test-shard test-serve \
-	dryrun-gate bench bench-json bench-serve bench-tpu ci-fast \
+	test-cp dryrun-gate bench bench-json bench-serve bench-tpu ci-fast \
 	autotune autotune-check
 
 # full tier-1 suite (everything, incl. multi-minute subprocess compiles)
@@ -35,11 +35,21 @@ test-serve:
 test-shard:
 	REPRO_TEST_DEVICES=8 $(PY) -m pytest -q -m shard tests/test_shard_map.py
 
+# context-parallel tier: seq-mode shard_map training parity (CP=2/4 grads
+# vs the single-device kernel, ring vs allgather carry exchange, plan
+# selection) on 8 forced host CPU devices
+test-cp:
+	REPRO_TEST_DEVICES=8 $(PY) -m pytest -q -m cp \
+		tests/test_context_parallel.py
+
 # sharding-health gate: the cells the shard-native work must keep clean —
 # 0 involuntary remats on train_4k (feature-TP scan AND the feature-TP
 # kernel training path) and decode_32k, decode routed to the shard_map
-# Pallas kernels (no jnp fallback), and TP=16 training routed to the
-# shard_map[feature] Dv-blocked kernels (no chunked-scan fallback)
+# Pallas kernels (no jnp fallback), TP=16 training routed to the
+# shard_map[feature] Dv-blocked kernels (no chunked-scan fallback), and
+# 1M-token context-parallel training (--cp 16) routed shard_map[seq]
+# with 0 remats — its cell JSON records the modeled constant-size
+# carry-exchange bytes next to the ring-attention O(N*D) alternative
 dryrun-gate:
 	$(PY) -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k \
 		--assert-no-remat --out results/dryrun-gate
@@ -51,10 +61,13 @@ dryrun-gate:
 		--out results/dryrun-gate
 	$(PY) -m repro.launch.dryrun --arch llama3-405b --shape decode_32k \
 		--attn softmax --assert-no-remat --out results/dryrun-gate
+	$(PY) -m repro.launch.dryrun --arch qwen3-1.7b --shape train_1M \
+		--cp 16 --attn fastmax2-kernel --assert-no-remat \
+		--assert-kernel-route --out results/dryrun-gate
 
 # mirror the CI PR job locally (`.github/workflows/ci.yml` fast tier):
-# the four suites a PR must keep green, in the same order
-ci-fast: test-fast test-kernels test-shard test-serve
+# the five suites a PR must keep green, in the same order
+ci-fast: test-fast test-kernels test-shard test-cp test-serve
 
 bench:
 	$(PY) -m benchmarks.run --quick

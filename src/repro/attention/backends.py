@@ -100,17 +100,26 @@ def _kernel_fn(q, k, v, spec: AttentionSpec, *, causal, kv_mask, rng,
     mesh = nontrivial_mesh()
     if mesh is not None:
         from repro.kernels.ops import use_pallas_bwd
-        plan = plan_kernel_sharding(mesh, batch=q.shape[0], hq=q.shape[1],
-                                    hkv=k.shape[1], dv=v.shape[-1])
+        plan = plan_kernel_sharding(
+            mesh, batch=q.shape[0], hq=q.shape[1], hkv=k.shape[1],
+            dv=v.shape[-1],
+            # seq mode (context parallelism) is causal-training-shaped
+            # only: N == M (self-attention over the full sequence)
+            seq_len=q.shape[2] if causal and q.shape[2] == k.shape[2]
+            else None)
         if plan is not None and (plan.mode == "heads"
-                                 or (causal and use_pallas_bwd())):
+                                 or (causal and (plan.mode == "seq"
+                                                 or use_pallas_bwd()))):
             # heads mode: fwd AND the fused Pallas bwd run shard-local per
             # (batch, kv-head) — autodiff of the shard_map applies the
             # custom_vjp per shard. feature mode (causal): the Dv-blocked
             # kernels run per value-feature shard — forward collective-
             # free, backward with one psum of the partial dq/dk per
             # launch; REPRO_FASTMAX_BWD=jnp restores the sharding-aware
-            # chunked scan (the equivalence oracle).
+            # chunked scan (the equivalence oracle). seq mode (context
+            # parallelism): each device scans its sequence shard, one
+            # constant-size moment exchange per direction — both backward
+            # backends support the seeded carry, so it routes either way.
             from repro.kernels.sharded import fastmax_sharded
             _log_once(f"attention: fastmax-kernel {plan.describe()}")
             qh = normalize_qk(q) if spec.normalize else q

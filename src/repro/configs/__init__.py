@@ -52,6 +52,9 @@ SHAPES = {
     "prefill_32k": ShapeSpec(32768, 32, "prefill"),
     "decode_32k": ShapeSpec(32768, 128, "decode"),
     "long_500k": ShapeSpec(524288, 1, "decode"),
+    # context-parallel training: 1M tokens across a "seq" mesh axis
+    # (dryrun --cp; the per-device scan sees seq_len/cp tokens)
+    "train_1M": ShapeSpec(1048576, 16, "train"),
 }
 
 

@@ -268,9 +268,9 @@ def compute_moments_chunked(
     mc = jnp.moveaxis(maskp.reshape(b, hkv, nc, chunk_size), 2, 0)
     if feature_shard:
         from repro.sharding.rules import shard_stacked
-        kc = shard_stacked(kc)
-        vc = shard_stacked(vc, model_dim=-1)
-        mc = shard_stacked(mc)
+        kc = shard_stacked(kc, seq_dim=0)
+        vc = shard_stacked(vc, model_dim=-1, seq_dim=0)
+        mc = shard_stacked(mc, seq_dim=0)
 
     def body(acc, xs):
         kc_i, vc_i, mc_i = xs
@@ -431,10 +431,13 @@ def _causal_scan(q, k, v, *, p, chunk_size, kv_mask, denom_eps,
     ws = jnp.moveaxis(wp.reshape(b, hkv, nc, cs), 2, 0)
     if feature_shard:
         from repro.sharding.rules import shard_stacked
-        qs = shard_stacked(qs)
-        ks = shard_stacked(ks)
-        vs = shard_stacked(vs, model_dim=-1)
-        ws = shard_stacked(ws)
+        # seq_dim=0: under a context-parallel mesh the stacked chunk runs
+        # live on the devices owning those tokens (graceful no-op without
+        # a "seq" axis or when nc doesn't divide)
+        qs = shard_stacked(qs, seq_dim=0)
+        ks = shard_stacked(ks, seq_dim=0)
+        vs = shard_stacked(vs, model_dim=-1, seq_dim=0)
+        ws = shard_stacked(ws, seq_dim=0)
 
     zero = jax.tree.map(
         jnp.zeros_like, compute_moments(ks[0], vs[0], p=p, kv_mask=ws[0])
@@ -492,7 +495,14 @@ def _causal_scan_cg_fwd(q, k, v, p, chunk_size, denom_eps,
     return o, (q, k, v, final)
 
 
-def _causal_scan_cg_bwd(p, chunk_size, denom_eps, feature_shard, res, do):
+def _causal_scan_cg_bwd(p, chunk_size, denom_eps, feature_shard, res, do,
+                        *, return_dstate=False):
+    """§2.5 reverse scan. `return_dstate=True` (keyword-only, never set by
+    the custom_vjp machinery) additionally returns the reverse scan's final
+    carry-cotangent — the gradient of the scan's INITIAL moments. For an
+    unseeded scan that cotangent is discarded (the initial carry is zeros);
+    for a context-parallel shard seeded with the carry of the earlier
+    shards it is exactly dC_i, the gradient those shards' moments receive."""
     q, k, v, final = res
     b, hq, n, d = q.shape
     hkv = k.shape[1]
@@ -576,7 +586,7 @@ def _causal_scan_cg_bwd(p, chunk_size, denom_eps, feature_shard, res, do):
     if feature_shard:
         gzero = _constrain_moments_j(gzero)
         final = _constrain_moments_j(final)
-    (_, _), (gqs, gks, gvs) = jax.lax.scan(
+    (_, gfinal), (gqs, gks, gvs) = jax.lax.scan(
         rev_body, (final, gzero), (qs, ks, vs, ws, dos), reverse=True
     )
     if feature_shard:
@@ -587,11 +597,14 @@ def _causal_scan_cg_bwd(p, chunk_size, denom_eps, feature_shard, res, do):
     gq = _ungroup(jnp.moveaxis(gqs, 0, 3).reshape(b, hkv, g, nc * cs, d))
     gk = jnp.moveaxis(gks, 0, 2).reshape(b, hkv, nc * cs, d)
     gv = jnp.moveaxis(gvs, 0, 2).reshape(b, hkv, nc * cs, dv)
-    return (
+    grads = (
         gq[:, :, :n].astype(q.dtype),
         gk[:, :, :n].astype(k.dtype),
         gv[:, :, :n].astype(v.dtype),
     )
+    if return_dstate:
+        return grads + (tuple(gfinal),)
+    return grads
 
 
 _causal_scan_cg.defvjp(_causal_scan_cg_fwd, _causal_scan_cg_bwd)

@@ -61,14 +61,23 @@ def _causal_kernel(
     k_ref,   # [1, C, D]
     v_ref,   # [1, C, Dv]
     w_ref,   # [1, C]       validity mask (1=real token, 0=padding)
-    o_ref,   # [1, G, C, Dv]
-    *refs,   # [state outputs (emit_state)] + 6 moment scratch buffers
+    *refs,   # [init-state inputs (has_init)] + o_ref +
+    #          [state outputs (emit_state)] + 6 moment scratch buffers
     p: int,
     bm: int,
     denom_eps: float,
     acc,
     emit_state: bool,
+    has_init: bool,
 ):
+    if has_init:
+        # initial carry: tokens already folded before this call (context-
+        # parallel shards / resumable prefill) — same layout as the emitted
+        # state, read once at the first chunk
+        (i0, i1, i2, j0, j1, j2) = refs[:6]
+        refs = refs[6:]
+    o_ref = refs[0]
+    refs = refs[1:]
     if emit_state:
         # final-carry outputs, m-major m2 — the decode kernel's native layout
         (m0o, m1o, m2o, g0o, g1o, g2o) = refs[:6]
@@ -82,13 +91,22 @@ def _causal_kernel(
     f32 = acc
     @pl.when(c == 0)
     def _init():
-        m0_s[...] = jnp.zeros_like(m0_s)
-        m1_s[...] = jnp.zeros_like(m1_s)
-        g0_s[...] = jnp.zeros_like(g0_s)
-        g1_s[...] = jnp.zeros_like(g1_s)
-        if p >= 2:
-            m2_s[...] = jnp.zeros_like(m2_s)
-            g2_s[...] = jnp.zeros_like(g2_s)
+        if has_init:
+            m0_s[...] = i0[0]
+            m1_s[...] = i1[0]
+            g0_s[...] = j0[0]
+            g1_s[...] = j1[0]
+            if p >= 2:
+                m2_s[...] = i2[0]
+                g2_s[...] = j2[0]
+        else:
+            m0_s[...] = jnp.zeros_like(m0_s)
+            m1_s[...] = jnp.zeros_like(m1_s)
+            g0_s[...] = jnp.zeros_like(g0_s)
+            g1_s[...] = jnp.zeros_like(g1_s)
+            if p >= 2:
+                m2_s[...] = jnp.zeros_like(m2_s)
+                g2_s[...] = jnp.zeros_like(g2_s)
 
     q = q_ref[0].astype(f32).reshape(g * cs, d)   # [GC, D]
     k = k_ref[0].astype(f32)                      # [C, D]
@@ -180,6 +198,7 @@ def fastmax_causal_pallas(
     interpret: bool = False,
     out_dtype=None,
     return_state: bool = False,
+    init_state=None,
     blk: int | None = None,
     bm: int | None = None,
     grid: str | None = None,
@@ -189,6 +208,12 @@ def fastmax_causal_pallas(
     ([B,Hkv,Dv], [B,Hkv,D,Dv], [B,Hkv,D,D,Dv], [B,Hkv], [B,Hkv,D],
     [B,Hkv,D,D]) in the accumulator dtype — emitted by the kernel itself
     (no second pass over k/v), ready for streaming decode.
+
+    `init_state` seeds the scan carry with a moment tuple in that same
+    layout (tokens already folded upstream: the earlier context-parallel
+    shards of the sequence, or the already-prefilled prompt prefix). The
+    scan then computes the EXACT causal output as if those tokens preceded
+    this call's k/v — the associativity of the moment fold.
 
     `blk` is the Dv carry-block width (must divide Dv); None picks the
     largest divisor whose degree-2 scratch tuple fits `FWD_BLK_BUDGET`
@@ -235,15 +260,43 @@ def fastmax_causal_pallas(
         raise ValueError(f"grid={grid!r}; expected 'parallel'|'arbitrary'")
     par = "parallel" if grid == "parallel" else "arbitrary"
     nb = dv // blk
+    has_init = init_state is not None
     kernel = functools.partial(_causal_kernel, p=p, bm=bm, denom_eps=denom_eps,
-                               acc=acc, emit_state=return_state)
+                               acc=acc, emit_state=return_state,
+                               has_init=has_init)
     bh = b * hkv
+    m2_rows = d * d if p >= 2 else 1
     sm = lambda h, b_, c: (h, 0, 0)       # noqa: E731 g-carry state blocks
     vb = lambda h, b_, c: (h, 0, b_)      # noqa: E731 Dv-blocked m-state
+    in_specs = [
+        pl.BlockSpec((1, g, cs, d), lambda h, b_, c: (h, 0, c, 0)),
+        pl.BlockSpec((1, cs, d), lambda h, b_, c: (h, c, 0)),
+        pl.BlockSpec((1, cs, blk), lambda h, b_, c: (h, c, b_)),
+        pl.BlockSpec((1, cs), lambda h, b_, c: (h, c)),
+    ]
+    operands = [qp, kp, vp, w]
+    if has_init:
+        i0, i1, i2, j0, j1, j2 = init_state
+        operands += [
+            i0.astype(acc).reshape(bh, 1, dv),
+            i1.astype(acc).reshape(bh, d, dv),
+            (i2.astype(acc).reshape(bh, d * d, dv) if p >= 2
+             else jnp.zeros((bh, 1, dv), acc)),
+            j0.astype(acc).reshape(bh, 1, 1),
+            j1.astype(acc).reshape(bh, 1, d),
+            j2.astype(acc).reshape(bh, d, d),
+        ]
+        in_specs += [
+            pl.BlockSpec((1, 1, blk), vb),
+            pl.BlockSpec((1, d, blk), vb),
+            pl.BlockSpec((1, m2_rows, blk), vb),
+            pl.BlockSpec((1, 1, 1), sm),
+            pl.BlockSpec((1, 1, d), sm),
+            pl.BlockSpec((1, d, d), sm),
+        ]
     out_specs = [pl.BlockSpec((1, g, cs, blk), lambda h, b_, c: (h, 0, c, b_))]
     out_shape = [jax.ShapeDtypeStruct((bh, g, nc * cs, dv), out_dtype)]
     if return_state:
-        m2_rows = d * d if p >= 2 else 1
         out_specs += [
             pl.BlockSpec((1, 1, blk), vb),
             pl.BlockSpec((1, d, blk), vb),
@@ -263,12 +316,7 @@ def fastmax_causal_pallas(
     outs = pl.pallas_call(
         kernel,
         grid=(bh, nb, nc),
-        in_specs=[
-            pl.BlockSpec((1, g, cs, d), lambda h, b_, c: (h, 0, c, 0)),
-            pl.BlockSpec((1, cs, d), lambda h, b_, c: (h, c, 0)),
-            pl.BlockSpec((1, cs, blk), lambda h, b_, c: (h, c, b_)),
-            pl.BlockSpec((1, cs), lambda h, b_, c: (h, c)),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs if return_state else out_specs[0],
         out_shape=out_shape if return_state else out_shape[0],
         scratch_shapes=[
@@ -289,7 +337,7 @@ def fastmax_causal_pallas(
             (par, "arbitrary" if return_state else par, "arbitrary")),
         interpret=interpret,
         name=f"fastmax_causal_p{p}",
-    )(qp, kp, vp, w)
+    )(*operands)
     if not return_state:
         outs = [outs]
     out = outs[0].reshape(b, hkv, g, nc * cs, dv)[:, :, :, :n]

@@ -76,15 +76,23 @@ def _causal_bwd_kernel(
     dq_ref,   # [1, 1, G, C, D]  per-block PARTIAL (summed by the wrapper)
     dk_ref,   # [1, 1, C, D]     per-block PARTIAL
     dv_ref,   # [1, C, BLK]      exact slice
-    # scratch: carry moments + carry-cotangent moments (Dv-block columns)
-    m0_s, m1_s, m2_s, g0_s, g1_s, g2_s,
-    gm0_s, gm1_s, gm2_s, gg0_s, gg1_s, gg2_s,
-    *,
+    *refs,    # [dstate outputs (return_dstate)] + 12 scratch buffers
     p: int,
     bm: int,
     denom_eps: float,
     acc,
+    return_dstate: bool,
 ):
+    if return_dstate:
+        # cotangent of the scan's INITIAL carry — the m-cotangents are exact
+        # Dv-column slices, the g-cotangents per-block partials (leading nb
+        # output axis, reduced by the wrapper). Context parallelism reads
+        # this as dC_i: the gradient each earlier shard's carry receives.
+        (dsm0, dsm1, dsm2, dsg0, dsg1, dsg2) = refs[:6]
+        refs = refs[6:]
+    # scratch: carry moments + carry-cotangent moments (Dv-block columns)
+    (m0_s, m1_s, m2_s, g0_s, g1_s, g2_s,
+     gm0_s, gm1_s, gm2_s, gg0_s, gg1_s, gg2_s) = refs
     t = pl.program_id(2)   # reverse step: chunk = nc-1-t via the index maps
     g, cs, d = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
     blk = v_ref.shape[2]
@@ -244,11 +252,30 @@ def _causal_bwd_kernel(
     dk_ref[0, 0] = dk.astype(dk_ref.dtype)
     dv_ref[0] = dvv.astype(dv_ref.dtype)
 
+    if return_dstate:
+        nc = pl.num_programs(2)
+
+        @pl.when(t == nc - 1)
+        def _emit_dstate():
+            # after folding chunk 0 (step 4 above) the carry-cotangent
+            # scratch IS d(initial carry) — every local chunk's use of the
+            # seeded moments has been chained through
+            dsm0[0] = gm0_s[...]
+            dsm1[0] = gm1_s[...]
+            dsg0[0, 0] = gg0_s[...]
+            dsg1[0, 0] = gg1_s[...]
+            if p >= 2:
+                dsm2[0] = gm2_s[...]
+                dsg2[0, 0] = gg2_s[...]
+            else:
+                dsm2[0] = jnp.zeros_like(dsm2[0])
+                dsg2[0, 0] = jnp.zeros_like(dsg2[0, 0])
+
 
 @functools.partial(
     jax.jit,
     static_argnames=("p", "chunk_size", "denom_eps", "interpret", "blk",
-                     "bm", "grid"),
+                     "bm", "grid", "return_dstate"),
 )
 def fastmax_causal_bwd_pallas(
     q: jnp.ndarray,   # [B, Hq, N, D]   (pre-normalized q̂, as in the fwd)
@@ -265,8 +292,16 @@ def fastmax_causal_bwd_pallas(
     blk: int | None = None,
     bm: int | None = None,
     grid: str | None = None,
+    return_dstate: bool = False,
 ):
-    """Returns (dq, dk, dv) in the input dtypes.
+    """Returns (dq, dk, dv) in the input dtypes. With `return_dstate=True`
+    additionally returns the cotangent of the scan's initial carry as a
+    moment-layout tuple ([B,Hkv,Dv], [B,Hkv,D,Dv], [B,Hkv,D,D,Dv], [B,Hkv],
+    [B,Hkv,D], [B,Hkv,D,D]) in the accumulator dtype. When the forward was
+    seeded with an initial state (context-parallel shards), `state` must be
+    that SEEDED forward's final carry; the reversible subtraction then
+    reconstructs down to the seed and the emitted cotangent is exactly the
+    gradient the seed — i.e. every earlier shard's moment delta — receives.
 
     `blk` is the Dv carry-block width (must divide Dv); None picks the
     largest divisor keeping BOTH degree-2 scratch tuples under
@@ -325,7 +360,8 @@ def fastmax_causal_bwd_pallas(
     par = "parallel" if grid == "parallel" else "arbitrary"
     nb = dv // blk
     kernel = functools.partial(_causal_bwd_kernel, p=p, bm=bm,
-                               denom_eps=denom_eps, acc=acc)
+                               denom_eps=denom_eps, acc=acc,
+                               return_dstate=return_dstate)
     rev = lambda h, b_, t: (h, nc - 1 - t, 0)        # noqa: E731 rev chunks
     revb = lambda h, b_, t: (h, nc - 1 - t, b_)      # noqa: E731 + Dv block
     revq = lambda h, b_, t: (h, 0, nc - 1 - t, 0)    # noqa: E731
@@ -335,7 +371,40 @@ def fastmax_causal_bwd_pallas(
     # dq/dk come back as per-Dv-block fp32 partials (leading nb axis) and
     # are reduced here: every backward term is linear in the block-local
     # cotangents, so the sum over blocks is the exact full gradient
-    dq_p, dk_p, dvv = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((1, 1, g, cs, d),
+                     lambda h, b_, t: (h, b_, 0, nc - 1 - t, 0)),
+        pl.BlockSpec((1, 1, cs, d),
+                     lambda h, b_, t: (h, b_, nc - 1 - t, 0)),
+        pl.BlockSpec((1, cs, blk), revb),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((bh, nb, g, nc * cs, d), acc),
+        jax.ShapeDtypeStruct((bh, nb, nc * cs, d), acc),
+        jax.ShapeDtypeStruct((bh, nc * cs, dv), v.dtype),
+    ]
+    if return_dstate:
+        # m-cotangents slice cleanly over Dv (vb); g-cotangents are built
+        # from the block-partial sden, so they carry a leading nb axis and
+        # are reduced below — the same partial/slice split as dq/dk vs dv
+        nbm = lambda h, b_, t: (h, b_, 0, 0)         # noqa: E731
+        out_specs += [
+            pl.BlockSpec((1, 1, blk), vb),
+            pl.BlockSpec((1, d, blk), vb),
+            pl.BlockSpec((1, m2_rows, blk), vb),
+            pl.BlockSpec((1, 1, 1, 1), nbm),
+            pl.BlockSpec((1, 1, 1, d), nbm),
+            pl.BlockSpec((1, 1, d, d), nbm),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((bh, 1, dv), acc),
+            jax.ShapeDtypeStruct((bh, d, dv), acc),
+            jax.ShapeDtypeStruct((bh, m2_rows, dv), acc),
+            jax.ShapeDtypeStruct((bh, nb, 1, 1), acc),
+            jax.ShapeDtypeStruct((bh, nb, 1, d), acc),
+            jax.ShapeDtypeStruct((bh, nb, d, d), acc),
+        ]
+    outs = pl.pallas_call(
         kernel,
         grid=(bh, nb, nc),
         in_specs=[
@@ -351,18 +420,8 @@ def fastmax_causal_bwd_pallas(
             pl.BlockSpec((1, 1, d), sm),
             pl.BlockSpec((1, d, d), sm),
         ],
-        out_specs=[
-            pl.BlockSpec((1, 1, g, cs, d),
-                         lambda h, b_, t: (h, b_, 0, nc - 1 - t, 0)),
-            pl.BlockSpec((1, 1, cs, d),
-                         lambda h, b_, t: (h, b_, nc - 1 - t, 0)),
-            pl.BlockSpec((1, cs, blk), revb),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bh, nb, g, nc * cs, d), acc),
-            jax.ShapeDtypeStruct((bh, nb, nc * cs, d), acc),
-            jax.ShapeDtypeStruct((bh, nc * cs, dv), v.dtype),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((1, blk), acc),
             pltpu.VMEM((d, blk), acc),
@@ -382,9 +441,22 @@ def fastmax_causal_bwd_pallas(
         name=f"fastmax_causal_bwd_p{p}",
     )(qp, kp, vp, w, dop, fm0, fm1, fm2, fg0, fg1, fg2)
 
+    dq_p, dk_p, dvv = outs[:3]
     dq = jnp.sum(dq_p, axis=1).astype(q.dtype)
     dk = jnp.sum(dk_p, axis=1).astype(k.dtype)
     dq = dq.reshape(b, hkv, g, nc * cs, d)[:, :, :, :n].reshape(b, hq, n, d)
     dk = dk.reshape(b, hkv, nc * cs, d)[:, :, :n]
     dvv = dvv.reshape(b, hkv, nc * cs, dv)[:, :, :n]
-    return dq, dk, dvv
+    if not return_dstate:
+        return dq, dk, dvv
+    dsm0, dsm1, dsm2, dsg0, dsg1, dsg2 = outs[3:]
+    dstate = (
+        dsm0.reshape(b, hkv, dv),
+        dsm1.reshape(b, hkv, d, dv),
+        (dsm2.reshape(b, hkv, d, d, dv) if p >= 2
+         else jnp.zeros((b, hkv, d, d, dv), acc)),
+        jnp.sum(dsg0, axis=1).reshape(b, hkv),
+        jnp.sum(dsg1, axis=1).reshape(b, hkv, d),
+        jnp.sum(dsg2, axis=1).reshape(b, hkv, d, d),
+    )
+    return dq, dk, dvv, dstate

@@ -106,13 +106,17 @@ def _fc_bwd(p, chunk_size, denom_eps, interpret, sched_fwd, sched_bwd, res,
 
 def fastmax_bwd(q, k, v, state, do, *, p: int = 2, chunk_size: int = 128,
                 denom_eps: float = 1e-6, interpret: bool | None = None,
-                schedule=None):
+                schedule=None, return_dstate: bool = False):
     """Causal fastmax backward on the kernel-emitted final carry.
 
     Returns (dq, dk, dv). The Dv-blocked fused Pallas kernel by default;
     REPRO_FASTMAX_BWD=jnp reroutes to the jnp §2.5 chunked reverse scan
     (the equivalence oracle and escape hatch). `state` may carry None for
     m2 at p < 2 (the custom_vjp residual drops the zeros placeholder).
+
+    `return_dstate=True` appends the cotangent of the scan's initial carry
+    (moment-layout tuple) — dC_i for a context-parallel shard whose forward
+    was seeded; supported by BOTH backends so CP grads stay oracle-testable.
 
     Also the per-shard backward of the feature-TP trainable path
     (`repro.kernels.sharded`): on a Dv shard of (v, do, m-moments) with the
@@ -128,7 +132,8 @@ def fastmax_bwd(q, k, v, state, do, *, p: int = 2, chunk_size: int = 128,
             schedule = _lookup("causal_bwd", q, k, v, p, chunk_size)
         return fastmax_causal_bwd_pallas(
             q, k, v, state, do, p=p, denom_eps=denom_eps,
-            interpret=interpret, **_causal_kwargs(schedule, chunk_size))
+            interpret=interpret, return_dstate=return_dstate,
+            **_causal_kwargs(schedule, chunk_size))
     # jnp oracle: the §2.5 chunked reverse scan on the same kernel-emitted
     # carry (kept for equivalence testing and as an escape hatch)
     if state[2] is None or p < 2:
@@ -136,7 +141,8 @@ def fastmax_bwd(q, k, v, state, do, *, p: int = 2, chunk_size: int = 128,
         m2 = jnp.zeros(k.shape[:2] + (d, d, dv), state[0].dtype)
         state = tuple(state[:2]) + (m2,) + tuple(state[3:])
     return _fm._causal_scan_cg_bwd(p, chunk_size, denom_eps, False,
-                                   (q, k, v, _fm.Moments(*state)), do)
+                                   (q, k, v, _fm.Moments(*state)), do,
+                                   return_dstate=return_dstate)
 
 
 _fastmax_causal_trainable.defvjp(_fc_fwd, _fc_bwd)
@@ -179,6 +185,7 @@ def fastmax(
 def fastmax_prefill_kernel(
     q, k, v, *, p: int = 2, chunk_size: int = 128, denom_eps: float = 1e-6,
     kv_mask=None, interpret: bool | None = None, schedule=None,
+    init_state=None,
 ):
     """Kernel-backed causal prefill on pre-normalized q̂/k̂ (distinct from
     the jnp `repro.core.decode_state.fastmax_prefill`, which normalizes
@@ -187,6 +194,10 @@ def fastmax_prefill_kernel(
     Returns (o, state): the final moment carry is emitted by the forward
     kernel itself (no recompute pass), in the layout `fastmax_decode`
     consumes natively — the prefill→decode handoff is one kernel launch.
+    `init_state` seeds the scan with an existing carry (moment tuple) —
+    tokens already folded by earlier context-parallel shards or an earlier
+    resumable-prefill call; the outputs are then the exact causal
+    continuation and the returned state includes the seed.
     """
     if interpret is None:
         interpret = use_interpret()
@@ -194,7 +205,8 @@ def fastmax_prefill_kernel(
         schedule = _lookup("causal_fwd", q, k, v, p, chunk_size)
     return fastmax_causal_pallas(
         q, k, v, kv_mask, p=p, denom_eps=denom_eps, interpret=interpret,
-        return_state=True, **_causal_kwargs(schedule, chunk_size))
+        return_state=True, init_state=init_state,
+        **_causal_kwargs(schedule, chunk_size))
 
 
 def fastmax_decode(

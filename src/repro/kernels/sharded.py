@@ -11,6 +11,22 @@ kernel body on its shard, with the partitioning chosen once per call site:
                 parallel per (batch, kv-head), so the wrapped call has ZERO
                 collectives; the only cross-device traffic left is the
                 row-parallel wo psum the caller already does.
+  seq mode      context parallelism for causal TRAINING: the sequence dim
+                sharded over a "seq" mesh axis, each device running the
+                full Pallas chunk scan on its contiguous token shard. The
+                chunk fold is associative (the §2.5 reversible carry is
+                built on it), so correctness needs exactly ONE constant-
+                size collective per direction: forward, each device folds
+                its local moments and receives the exclusive prefix sum of
+                the earlier shards' moments (ppermute ring or allgather,
+                picked by modeled bytes — `pick_cp_exchange`), seeding its
+                kernel launch; backward, the fused kernel emits the
+                cotangent of its seed (dC_i) and the suffix sum over later
+                shards gives the gradient each shard's own moment delta
+                receives — chained through `jax.vjp(compute_moments)`.
+                Boundary traffic is O(D²·Dv) per device pair, independent
+                of N — vs ring-attention's O(N·D) KV rotation
+                (`cp_boundary_model` records both for the dryrun gate).
   feature mode  Hkv % tp != 0 (GQA/MQA at TP degree > Hkv) but Dv % tp == 0:
                 moments and v sharded on the value-feature dim over "model"
                 (the feature-TP layout of `_constrain_moments_j`), q/k and
@@ -43,6 +59,7 @@ kernel call) from "mesh but unpartitionable".
 from __future__ import annotations
 
 import functools
+import os
 from typing import NamedTuple, Optional
 
 import jax
@@ -51,7 +68,8 @@ from jax.sharding import PartitionSpec as P
 
 __all__ = ["ShardPlan", "nontrivial_mesh", "plan_kernel_sharding",
            "fastmax_sharded", "fastmax_prefill_sharded",
-           "fastmax_decode_sharded"]
+           "fastmax_decode_sharded", "pick_cp_exchange", "cp_carry_bytes",
+           "cp_boundary_model"]
 
 
 class ShardPlan(NamedTuple):
@@ -59,8 +77,9 @@ class ShardPlan(NamedTuple):
 
     mesh: object            # jax.sharding.Mesh
     batch: object           # P entry for the batch dim: None | axis | tuple
-    mode: str               # "heads" | "feature"
+    mode: str               # "heads" | "feature" | "seq"
     tp: int                 # size of the "model" axis (1 = no TP)
+    cp: int = 1             # size of the "seq" axis (1 = no CP)
 
     @property
     def head(self):
@@ -89,7 +108,8 @@ def nontrivial_mesh():
 
 
 def plan_kernel_sharding(mesh, *, batch: int, hq: int, hkv: int,
-                         dv: int) -> Optional[ShardPlan]:
+                         dv: int, seq_len: int | None = None,
+                         ) -> Optional[ShardPlan]:
     """Pick the partitioning for a fastmax kernel call, or None.
 
     None means the mesh tensor-parallelizes over "model" but neither kv
@@ -98,12 +118,21 @@ def plan_kernel_sharding(mesh, *, batch: int, hq: int, hkv: int,
     gracefully per dim. Any other mesh gets a plan, possibly degenerate
     (no 'model' axis, batch indivisible -> an all-replicated wrap), so the
     kernels stay the path whenever they CAN run.
+
+    `seq_len` opts into seq mode (context parallelism): callers pass it
+    only for causal TRAINING-shaped calls on a mesh with a "seq" axis of
+    size > 1 dividing it. CP×TP composition is deferred: with tp > 1 the
+    head/feature modes win and the seq axis is simply unused (replicated —
+    still correct, just not context-parallel). Decode/prefill callers
+    never pass seq_len, so under a pure-CP mesh they get the degenerate
+    heads plan and the kernels stay the path.
     """
     if mesh is None:
         return None
     from repro.sharding.rules import _batch_entry
 
     tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    cp = mesh.shape["seq"] if "seq" in mesh.axis_names else 1
     b_entry, _ = _batch_entry(mesh, batch)
     if tp > 1:
         if hkv % tp == 0 and hq % tp == 0:
@@ -112,6 +141,9 @@ def plan_kernel_sharding(mesh, *, batch: int, hq: int, hkv: int,
             mode = "feature"
         else:
             return None
+    elif cp > 1 and seq_len is not None and seq_len % cp == 0:
+        mode = "seq"
+        return ShardPlan(mesh=mesh, batch=b_entry, mode=mode, tp=tp, cp=cp)
     else:
         mode = "heads"   # degenerate: DP-only wrap, heads unsharded
     return ShardPlan(mesh=mesh, batch=b_entry, mode=mode, tp=tp)
@@ -128,6 +160,218 @@ def _moment_specs(plan: ShardPlan):
         P(ba, h, None),                 # g1 [B,Hkv,D]
         P(ba, h, None, None),           # g2 [B,Hkv,D,D]
     )
+
+
+# ---------------------------------------------------------------------------
+# Context parallelism (seq mode)
+# ---------------------------------------------------------------------------
+
+# temp-memory budget for the allgather exchange: gathering cp carries
+# materializes cp × carry_bytes per device; past this, take the ring's
+# cp-1 sequential constant-size hops instead
+_CP_ALLGATHER_BUDGET = 256 * 1024 * 1024
+
+
+def cp_carry_bytes(*, b: int, hkv: int, d: int, dv: int, p: int,
+                   itemsize: int = 4) -> int:
+    """Bytes of ONE device's exchanged moment carry (the per-boundary
+    payload). m2/g2 exist only at p >= 2 — at p = 1 they are zeros the
+    exchange skips."""
+    elems = dv + d * dv + 1 + d
+    if p >= 2:
+        elems += d * d * dv + d * d
+    return b * hkv * elems * itemsize
+
+
+def pick_cp_exchange(cp: int, carry_bytes: int) -> str:
+    """'allgather' (one collective, cp·carry_bytes temp) under the budget,
+    else 'ring' (cp-1 ppermute hops, constant memory). REPRO_CP_EXCHANGE
+    overrides: auto|ring|allgather (the two differ in summation ORDER, so
+    tests compare them under allclose, not bitwise)."""
+    forced = os.environ.get("REPRO_CP_EXCHANGE", "auto").lower()
+    if forced in ("ring", "allgather"):
+        return forced
+    return "allgather" if cp * carry_bytes <= _CP_ALLGATHER_BUDGET else "ring"
+
+
+def cp_boundary_model(*, n: int, b: int, hkv: int, d: int, dv: int, p: int,
+                      cp: int, itemsize: int = 4) -> dict:
+    """Modeled per-boundary collective bytes: the CP carry exchange vs the
+    ring-attention alternative (each boundary step rotates a neighbor's
+    K/V shard of n/cp tokens — O(N·D), growing with sequence length; the
+    moment carry is O(D²·Dv), independent of N). Recorded in the dryrun
+    cell JSON so the gate can assert N-independence."""
+    carry = cp_carry_bytes(b=b, hkv=hkv, d=d, dv=dv, p=p, itemsize=itemsize)
+    ring_attn = b * hkv * (n // max(cp, 1)) * (d + dv) * itemsize
+    return {
+        "cp": cp,
+        "exchange": pick_cp_exchange(cp, carry),
+        "carry_bytes_per_boundary": carry,
+        "ring_attention_bytes_per_boundary": ring_attn,
+        "carry_to_ring_ratio": carry / ring_attn if ring_attn else None,
+    }
+
+
+def _cp_prefix_sum(leaves: tuple, cp: int, impl: str, reverse: bool = False):
+    """EXCLUSIVE prefix (Σ_{j<i}; reverse=True: suffix Σ_{j>i}) sum of
+    per-device arrays over the "seq" axis. Runs inside a shard_map body.
+
+    allgather: one collective + a masked contraction. ring: cp-1
+    sequential ppermute hops — after s hops device i holds shard i∓s's
+    leaves and folds them iff that shard is on the correct side (no
+    wraparound contribution is ever included)."""
+    import jax.numpy as jnp
+
+    idx = jax.lax.axis_index("seq")
+    if impl == "allgather":
+        ar = jnp.arange(cp)
+        sel = (ar > idx) if reverse else (ar < idx)
+
+        def one(x):
+            g = jax.lax.all_gather(x, "seq")             # [cp, ...]
+            return jnp.tensordot(sel.astype(g.dtype), g, axes=1)
+
+        return tuple(one(x) for x in leaves)
+    shift = -1 if reverse else 1
+    perm = [(j, (j + shift) % cp) for j in range(cp)]
+    acc = tuple(jnp.zeros_like(x) for x in leaves)
+    msg = leaves
+    for s in range(1, cp):
+        msg = tuple(jax.lax.ppermute(x, "seq", perm) for x in msg)
+        take = (idx < cp - s) if reverse else (idx >= s)
+        acc = tuple(a + jnp.where(take, m, jnp.zeros_like(m))
+                    for a, m in zip(acc, msg))
+    return acc
+
+
+def _seq_state_specs(ba):
+    """Specs of the stacked per-shard carry [cp(seq), B, Hkv, ...] — each
+    shard's final moments differ, so the residual keeps them under a
+    leading "seq"-sharded axis instead of pretending replication."""
+    return (
+        P("seq", ba, None, None),                # m0 [cp,B,Hkv,Dv]
+        P("seq", ba, None, None, None),          # m1
+        P("seq", ba, None, None, None, None),    # m2
+        P("seq", ba, None),                      # g0
+        P("seq", ba, None, None),                # g1
+        P("seq", ba, None, None, None),          # g2
+    )
+
+
+def _seq_fwd_launch(q, k, v, p, chunk_size, denom_eps, plan, schedule):
+    """Seq-mode forward: (o, stacked per-shard final carries).
+
+    Per device: fold the local shard's moments (jnp chunked fold — same
+    flop order as the kernel's, memory-bounded), ONE exclusive-prefix
+    exchange of the constant-size carry, then a single seeded Pallas
+    launch whose outputs are the exact causal outputs of the full
+    sequence restricted to this shard.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.fastmax import compute_moments_chunked
+    from repro.kernels import ops as kernel_ops
+
+    b, hq, n, d = q.shape
+    hkv, dv = k.shape[1], v.shape[-1]
+    ba, cp = plan.batch, plan.cp
+    impl = pick_cp_exchange(
+        cp, cp_carry_bytes(b=b, hkv=hkv, d=d, dv=dv, p=p))
+    shard4 = P(ba, None, "seq", None)
+
+    def body(q, k, v):
+        mom = compute_moments_chunked(k, v, p=p, chunk_size=chunk_size)
+        live = tuple(mom) if p >= 2 else (mom[0], mom[1], mom[3], mom[4])
+        carry = _cp_prefix_sum(live, cp, impl)
+        if p < 2:
+            carry = (carry[0], carry[1], jnp.zeros_like(mom[2]),
+                     carry[2], carry[3], jnp.zeros_like(mom[5]))
+        o, state = kernel_ops.fastmax_prefill_kernel(
+            q, k, v, p=p, chunk_size=chunk_size, denom_eps=denom_eps,
+            schedule=schedule, init_state=carry)
+        return o, tuple(x[None] for x in state)
+
+    return shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(shard4, shard4, shard4),
+        out_specs=(shard4, _seq_state_specs(ba)),
+        check_rep=False,
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _seq_trainable(q, k, v, p, chunk_size, denom_eps, plan, schedule):
+    o, _ = _seq_fwd_launch(q, k, v, p, chunk_size, denom_eps, plan,
+                           schedule)
+    return o
+
+
+def _st_fwd(q, k, v, p, chunk_size, denom_eps, plan, schedule):
+    o, state = _seq_fwd_launch(q, k, v, p, chunk_size, denom_eps, plan,
+                               schedule)
+    if p < 2:
+        # don't hold the [cp,B,Hkv,D,D,Dv] zeros placeholder as a residual
+        state = state[:2] + (None,) + state[3:]
+    return o, (q, k, v, tuple(state))
+
+
+def _st_bwd(p, chunk_size, denom_eps, plan, schedule, res, do):
+    q, k, v, state = res
+    from repro.core.fastmax import compute_moments_chunked
+    from repro.kernels import ops as kernel_ops
+
+    b, hq, n, d = q.shape
+    hkv, dv = k.shape[1], v.shape[-1]
+    ba, cp = plan.batch, plan.cp
+    impl = pick_cp_exchange(
+        cp, cp_carry_bytes(b=b, hkv=hkv, d=d, dv=dv, p=p))
+    shard4 = P(ba, None, "seq", None)
+    sspecs = _seq_state_specs(ba)
+    no_m2 = state[2] is None
+    if no_m2:
+        state, sspecs = state[:2] + state[3:], sspecs[:2] + sspecs[3:]
+
+    def body(q, k, v, do, *state):
+        import jax.numpy as jnp
+
+        state = tuple(x[0] for x in state)      # strip the stacked seq lead
+        if no_m2:
+            state = state[:2] + (None,) + state[2:]
+        # local fused backward on the SEEDED forward's final carry: the
+        # reversible subtraction reconstructs down to the seed, so dq/dk/dv
+        # are this shard's exact local grads and dC the seed's cotangent
+        dq, dk, dvv, dC = kernel_ops.fastmax_bwd(
+            q, k, v, state, do, p=p, chunk_size=chunk_size,
+            denom_eps=denom_eps, schedule=schedule, return_dstate=True)
+        # one suffix exchange: later shards' seeds contain THIS shard's
+        # moment delta, so Σ_{j>i} dC_j is the gradient it receives
+        live = (tuple(dC) if p >= 2
+                else (dC[0], dC[1], dC[3], dC[4]))
+        dM = _cp_prefix_sum(live, cp, impl, reverse=True)
+
+        def moments_fn(kk, vv):
+            mom = compute_moments_chunked(kk, vv, p=p,
+                                          chunk_size=chunk_size)
+            return (tuple(mom) if p >= 2
+                    else (mom[0], mom[1], mom[3], mom[4]))
+
+        prim, vjp_fn = jax.vjp(moments_fn, k, v)
+        dM = tuple(x.astype(y.dtype) for x, y in zip(dM, prim))
+        dk_x, dv_x = vjp_fn(dM)
+        acc = jnp.promote_types(q.dtype, jnp.float32)
+        dk = (dk.astype(acc) + dk_x.astype(acc)).astype(k.dtype)
+        dvv = (dvv.astype(acc) + dv_x.astype(acc)).astype(v.dtype)
+        return dq, dk, dvv
+
+    return shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(shard4, shard4, shard4, shard4, *sspecs),
+        out_specs=(shard4, shard4, shard4),
+        check_rep=False,
+    )(q, k, v, do, *state)
+
+
+_seq_trainable.defvjp(_st_fwd, _st_bwd)
 
 
 def fastmax_sharded(q, k, v, *, p: int, causal: bool, chunk_size: int,
@@ -166,8 +410,11 @@ def fastmax_sharded(q, k, v, *, p: int, causal: bool, chunk_size: int,
         )(q, k, v)
     if not causal:
         raise ValueError(
-            "feature-mode trainable shard_map is causal-only; route "
+            "feature/seq-mode trainable shard_map is causal-only; route "
             "noncausal feature-TP attention to the chunked scan")
+    if plan.mode == "seq":
+        return _seq_trainable(q, k, v, p, chunk_size, denom_eps, plan,
+                              schedule)
     return _feature_trainable(q, k, v, p, chunk_size, denom_eps, plan,
                               schedule)
 

@@ -128,7 +128,7 @@ def _opt_shardings(opt_shapes, param_sh, mesh):
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              attn: AttentionSpec | str | None = None, donate: bool = True,
-             extra_cfg: dict | None = None) -> dict:
+             extra_cfg: dict | None = None, cp: int = 1) -> dict:
     t0 = time.time()
     shape = SHAPES[shape_name]
     overrides = dict(extra_cfg or {})
@@ -153,8 +153,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     _LOGGED.clear()
     autotune.clear_lookups()
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod, cp=cp)
     n_chips = mesh.devices.size
+    if cp > 1 and shape.seq_len % cp:
+        raise ValueError(f"--cp {cp} must divide seq_len={shape.seq_len}")
     key = jax.random.PRNGKey(0)
     params_shapes, axes = init_model(key, cfg, abstract=True)
     n_params = sum(int(jnp.prod(jnp.asarray(x.shape)))
@@ -278,12 +280,24 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     model_flops = (6.0 if shape.kind == "train" else 2.0) * active_p * tokens
     useful_ratio = model_flops / max(1.0, flops_dev * n_chips)
 
+    cp_boundary = None
+    if cp > 1 and shape.kind == "train":
+        # modeled per-boundary collective bytes of the context-parallel
+        # carry exchange, next to the ring-attention O(N·D) alternative —
+        # the gate asserts the carry payload is independent of N
+        from repro.kernels.sharded import cp_boundary_model
+        cp_boundary = cp_boundary_model(
+            n=shape.seq_len, b=shape.global_batch, hkv=cfg.n_kv_heads,
+            d=cfg.head_dim, dv=cfg.head_dim, p=cfg.attn.p, cp=cp)
+
     out = {
         "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "cp": cp,
+        "cp_boundary": cp_boundary,
         "xla_remat": xla_diag.get("xla_remat", {"count": 0, "lines": []}),
         "attn_routing": sorted(_LOGGED),
         "attn_schedule": autotune.snapshot_lookups(),
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
         "n_chips": int(n_chips),
         "attn_backend": cfg.attn.legacy_name,   # result-JSON back-compat key
         "attn_spec": str(cfg.attn),
@@ -325,6 +339,10 @@ def main():
                     help="attention operator (AttentionSpec.parse name, "
                          "e.g. softmax, fastmax2, fastmax2-kernel)")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--cp", type=int, default=1,
+                    help="context-parallel degree: trade the 'model' mesh "
+                         "axis for a 'seq' axis of this size (train cells; "
+                         "fastmax routes shard_map[seq])")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--quiet", action="store_true")
     ap.add_argument("--assert-no-remat", action="store_true",
@@ -351,10 +369,11 @@ def main():
         for shape in shapes:
             for multi in meshes:
                 tag = f"{arch}__{shape}__{'multi' if multi else 'single'}" \
-                    + (f"__{args.attn}" if args.attn else "")
+                    + (f"__{args.attn}" if args.attn else "") \
+                    + (f"__cp{args.cp}" if args.cp > 1 else "")
                 try:
                     res = run_cell(arch, shape, multi_pod=multi,
-                                   attn=args.attn)
+                                   attn=args.attn, cp=args.cp)
                     status = "SKIP" if "skipped" in res else "OK"
                     gate_errs = []
                     n_remat = res.get("xla_remat", {}).get("count", 0)

@@ -19,6 +19,7 @@ Usage (CPU example, reduced config):
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import time
 
@@ -48,6 +49,34 @@ def build(args):
     return cfg
 
 
+def _cp_mesh_context(args):
+    """Context manager activating a (data, seq) mesh when --cp > 1.
+
+    Under the active mesh, `attention()` plans seq mode
+    (`repro.kernels.sharded`): each device scans its sequence shard with
+    the Pallas kernels and exchanges one constant-size moment carry per
+    boundary (forward prefix / backward suffix). --cp 1 is a no-op.
+    """
+    if args.cp <= 1:
+        return contextlib.nullcontext()
+    from repro.launch.mesh import make_test_mesh
+
+    n_dev = len(jax.devices())
+    if args.cp > n_dev or n_dev % args.cp:
+        raise SystemExit(
+            f"--cp {args.cp} must divide the device count ({n_dev})")
+    if args.seq % args.cp:
+        raise SystemExit(
+            f"--seq {args.seq} must be divisible by --cp {args.cp}")
+    mesh = make_test_mesh(shape=(n_dev // args.cp, args.cp),
+                          axes=("data", "seq"))
+    print(f"context parallelism: cp={args.cp} "
+          f"mesh=(data={n_dev // args.cp}, seq={args.cp})", flush=True)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -59,6 +88,12 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--cp", type=int, default=1,
+                    help="context-parallel degree: train under a "
+                         "(data=n_dev/cp, seq=cp) mesh — fastmax attention "
+                         "shards the sequence over 'seq' with one constant-"
+                         "size moment exchange per shard boundary "
+                         "(docs/context_parallel.md)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -66,59 +101,63 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args(argv)
 
-    cfg = build(args)
-    key = jax.random.PRNGKey(0)
-    params, axes = init_model(key, cfg)
-    n_params = count_params(params)
-    print(f"arch={cfg.name} params={n_params/1e6:.2f}M "
-          f"attn={cfg.attn}", flush=True)
+    with _cp_mesh_context(args):
+        cfg = build(args)
+        key = jax.random.PRNGKey(0)
+        params, axes = init_model(key, cfg)
+        n_params = count_params(params)
+        print(f"arch={cfg.name} params={n_params/1e6:.2f}M "
+              f"attn={cfg.attn}", flush=True)
 
-    opt_name, optimizer = pick_optimizer(cfg, n_params, lr=args.lr,
-                                         total_steps=args.steps)
-    opt_init, _ = optimizer
-    opt_state = opt_init(params)
-    train_step = jax.jit(make_train_step(cfg, optimizer),
-                         donate_argnums=(0, 1))
+        opt_name, optimizer = pick_optimizer(cfg, n_params, lr=args.lr,
+                                             total_steps=args.steps)
+        opt_init, _ = optimizer
+        opt_state = opt_init(params)
+        train_step = jax.jit(make_train_step(cfg, optimizer),
+                             donate_argnums=(0, 1))
 
-    data = SyntheticLM(cfg.vocab_size, args.seq, seed=0)
-    start_step = 0
+        data = SyntheticLM(cfg.vocab_size, args.seq, seed=0)
+        start_step = 0
 
-    mgr = None
-    if args.ckpt_dir:
-        mgr = CheckpointManager(args.ckpt_dir)
-        if args.resume and mgr.latest_step() is not None:
-            (params, opt_state), start_step, _ = mgr.restore(
-                (params, opt_state))
-            print(f"resumed from step {start_step}", flush=True)
+        mgr = None
+        if args.ckpt_dir:
+            mgr = CheckpointManager(args.ckpt_dir)
+            if args.resume and mgr.latest_step() is not None:
+                (params, opt_state), start_step, _ = mgr.restore(
+                    (params, opt_state))
+                print(f"resumed from step {start_step}", flush=True)
 
-    pre = PreemptionHandler()
-    mon = StragglerMonitor()
-    it = make_batch_iterator(data, args.batch, start_step=start_step)
-    losses = []
-    try:
-        for step, batch in it:
-            if step >= args.steps or pre.requested:
-                break
-            mon.start_step()
-            batch = jax.tree.map(jnp.asarray, batch)
-            params, opt_state, metrics = train_step(params, opt_state, batch)
-            dt = mon.end_step()
-            losses.append(float(metrics["loss"]))
-            if step % args.log_every == 0:
-                print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
-                      f"gnorm {float(metrics['gnorm']):.3f} {dt*1e3:.0f}ms"
-                      + (" [STRAGGLER]" if mon.straggling else ""),
-                      flush=True)
-            if mgr and step > 0 and step % args.ckpt_every == 0:
-                mgr.save(step, (params, opt_state), block=False)
-    finally:
-        it.close()
-    if mgr:
-        mgr.save(min(step, args.steps), (params, opt_state), block=True)
-    print(f"final loss {np.mean(losses[-10:]):.4f} "
-          f"(first10 {np.mean(losses[:10]):.4f}) "
-          f"step_stats={mon.stats()}", flush=True)
-    return params
+        pre = PreemptionHandler()
+        mon = StragglerMonitor()
+        it = make_batch_iterator(data, args.batch, start_step=start_step)
+        losses = []
+        try:
+            for step, batch in it:
+                if step >= args.steps or pre.requested:
+                    break
+                mon.start_step()
+                batch = jax.tree.map(jnp.asarray, batch)
+                params, opt_state, metrics = train_step(params, opt_state,
+                                                        batch)
+                dt = mon.end_step()
+                losses.append(float(metrics["loss"]))
+                if step % args.log_every == 0:
+                    print(f"step {step:5d} loss "
+                          f"{float(metrics['loss']):.4f} "
+                          f"gnorm {float(metrics['gnorm']):.3f} "
+                          f"{dt*1e3:.0f}ms"
+                          + (" [STRAGGLER]" if mon.straggling else ""),
+                          flush=True)
+                if mgr and step > 0 and step % args.ckpt_every == 0:
+                    mgr.save(step, (params, opt_state), block=False)
+        finally:
+            it.close()
+        if mgr:
+            mgr.save(min(step, args.steps), (params, opt_state), block=True)
+        print(f"final loss {np.mean(losses[-10:]):.4f} "
+              f"(first10 {np.mean(losses[:10]):.4f}) "
+              f"step_stats={mon.stats()}", flush=True)
+        return params
 
 
 if __name__ == "__main__":

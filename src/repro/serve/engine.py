@@ -83,6 +83,7 @@ class ServeEngine:
         self._last_token = np.zeros(b, np.int32)
         self._generated: Dict[int, List[int]] = {}
         self._next_rid = 0
+        self._prefill_cursor = 0      # round-robin over mid-prefill slots
         self.tick_count = 0
         self.decode_tokens = 0        # decode-part tokens (TPOT accounting)
         self.prefill_tokens = 0
@@ -97,6 +98,13 @@ class ServeEngine:
     def submit(self, prompt, max_new_tokens: int, *, eos_id=None,
                callback=None) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) == 0:
+            raise ValueError(
+                "empty prompt: at least one token must prefill to produce "
+                "the first logits")
+        if max_new_tokens <= 0:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}")
         if len(prompt) + max_new_tokens > self.slots.max_len:
             raise ValueError(
                 f"prompt {len(prompt)} + gen {max_new_tokens} exceeds "
@@ -195,8 +203,17 @@ class ServeEngine:
             self._generated[req.rid] = []
 
     def _pick_prefill(self):
-        """Lowest slot still owing prompt tokens -> its next chunk."""
-        for slot in range(self.slots.max_slots):
+        """Next slot still owing prompt tokens -> its next chunk.
+
+        Round-robin from a persistent cursor, NOT always the lowest slot:
+        one tick prefills one chunk, so a lowest-first scan would feed
+        slot 0's long prompt to completion while later slots (admitted the
+        same tick) wait at position 0 — head-of-line bias that inflates
+        their TTFT. The cursor resumes after the last-served slot so
+        concurrent prompts interleave chunk-for-chunk."""
+        b = self.slots.max_slots
+        for i in range(b):
+            slot = (self._prefill_cursor + i) % b
             rid = self._rid[slot]
             if rid is None or self.slots.active[slot] or self.slots.eos[slot]:
                 continue
@@ -204,6 +221,7 @@ class ServeEngine:
             plen = int(self._prompt_len[slot])
             if pos >= plen:
                 continue
+            self._prefill_cursor = (slot + 1) % b
             n = min(self.chunk, plen - pos)
             toks = self._req[rid].prompt[pos:pos + n]
             if n == self.chunk:

@@ -59,6 +59,11 @@ class PrefixCache:
         first logits). Returns (m, state) or (0, None)."""
         plen = len(prompt)
         top = (plen - 1) // self.chunk * self.chunk
+        if top <= 0:
+            # no cacheable prefix even exists at this length (keys are
+            # multiples of chunk, strictly shorter than the prompt) — not a
+            # miss, or sub-chunk prompts would skew the hit-rate stats
+            return 0, None
         for m in range(top, 0, -self.chunk):
             key = prefix_key(prompt, m)
             ent = self._entries.get(key)

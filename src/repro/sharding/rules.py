@@ -78,7 +78,7 @@ def model_axis_size(mesh=None) -> int:
     return mesh.shape["model"]
 
 
-def shard_stacked(x, *, batch_dim=1, model_dim=None):
+def shard_stacked(x, *, batch_dim=1, model_dim=None, seq_dim=None):
     """Pin a scan-stacked chunk tensor [nc, B, ...] to one total layout.
 
     The chunked-scan paths stack their per-chunk inputs/outputs along a
@@ -91,6 +91,12 @@ def shard_stacked(x, *, batch_dim=1, model_dim=None):
     v/output chunks; None = model-replicated), everything else replicated —
     gives the scan one consistent layout at its boundary, so enabling
     feature-TP on the scan no longer induces remats.
+
+    `seq_dim` pins the stacked-chunk axis itself to the "seq" (context-
+    parallel) mesh axis when present and dividing: contiguous chunk runs
+    then live on the device that owns those tokens, so a jnp chunked path
+    under a CP mesh keeps its stacked buffers token-local instead of
+    replicating nc full-size chunk tensors per device.
 
     No-op without an active mesh; axes that don't divide degrade to
     replication like every rule here.
@@ -105,6 +111,12 @@ def shard_stacked(x, *, batch_dim=1, model_dim=None):
         tp = model_axis_size(mesh)
         if tp > 1 and x.shape[model_dim] % tp == 0:
             entries[model_dim] = "model"
+    if seq_dim is not None and "seq" in mesh.axis_names:
+        seq_dim = seq_dim % x.ndim
+        cp = mesh.shape["seq"]
+        if cp > 1 and entries[seq_dim] is None \
+                and x.shape[seq_dim] % cp == 0:
+            entries[seq_dim] = "seq"
     return jax.lax.with_sharding_constraint(x, P(*entries))
 
 

@@ -239,6 +239,76 @@ def test_softmax_prefill_kv_mask_persists_through_steps():
                                rtol=1e-6, atol=1e-7)
 
 
+def test_fastmax_resumable_prefill_3d_kv_mask_bitwise():
+    """Chunked (offset=...) prefill with a per-head [B, Hkv, N] kv_mask
+    must be BITWISE equal to the whole-prompt offset prefill: the carried
+    moments seed the scan exactly, and per-head masking survives the
+    split."""
+    rng = np.random.default_rng(21)
+    spec = AttentionSpec(family="fastmax", p=2, chunk_size=16)
+    b, hq, hkv, n, d = 2, 4, 2, 32, 8
+    q, k, v = mk(rng, b, hq, hkv, n, d, d)
+    mask = (rng.random((b, hkv, n)) < 0.7).astype(np.float64)
+    mask[..., 0] = 1.0                 # keep row 0 denominators non-degenerate
+    mask = jnp.asarray(mask)
+
+    def fresh():
+        return init_state(spec, batch=b, n_kv_heads=hkv, q_head_dim=d,
+                          v_head_dim=d, max_len=n, dtype=jnp.float64)
+
+    zero = jnp.asarray(0, jnp.int32)
+    o_full, st_full = prefill(q, k, v, spec, state=fresh(), kv_mask=mask,
+                              offset=zero)
+    c = 16                             # split exactly at a chunk boundary
+    st = fresh()
+    o1, st = prefill(q[:, :, :c], k[:, :, :c], v[:, :, :c], spec, state=st,
+                     kv_mask=mask[:, :, :c], offset=zero)
+    o2, st = prefill(q[:, :, c:], k[:, :, c:], v[:, :, c:], spec, state=st,
+                     kv_mask=mask[:, :, c:],
+                     offset=jnp.asarray(c, jnp.int32))
+    got = jnp.concatenate([o1, o2], axis=2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(o_full))
+    for name, a, ref in zip(st.moments._fields, st.moments,
+                            st_full.moments):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(ref),
+                                      err_msg=name)
+
+
+def test_softmax_resumable_prefill_3d_kv_mask_matches_whole():
+    """Same split through the KV-cache resume path: outputs match the
+    whole-prompt call and a later decode step sees identical caches (the
+    per-head mask rides the cache's mask lane across the resume)."""
+    rng = np.random.default_rng(22)
+    spec = AttentionSpec(family="softmax")
+    b, hq, hkv, n, d = 1, 4, 2, 32, 8
+    q, k, v = mk(rng, b, hq, hkv, n, d, d)
+    mask = (rng.random((b, hkv, n)) < 0.7).astype(np.float64)
+    mask[..., 0] = 1.0
+    mask = jnp.asarray(mask)
+
+    def fresh():
+        return init_state(spec, batch=b, n_kv_heads=hkv, q_head_dim=d,
+                          v_head_dim=d, max_len=n + 2, dtype=jnp.float64)
+
+    o_full, st_full = prefill(q, k, v, spec, state=fresh(), kv_mask=mask)
+    c = 16
+    st = fresh()
+    o1, st = prefill(q[:, :, :c], k[:, :, :c], v[:, :, :c], spec, state=st,
+                     kv_mask=mask[:, :, :c],
+                     offset=jnp.asarray(0, jnp.int32))
+    o2, st = prefill(q[:, :, c:], k[:, :, c:], v[:, :, c:], spec, state=st,
+                     kv_mask=mask[:, :, c:],
+                     offset=jnp.asarray(c, jnp.int32))
+    got = jnp.concatenate([o1, o2], axis=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(o_full),
+                               rtol=2e-5, atol=2e-5)
+    q1, k1, v1 = mk(rng, b, hq, hkv, 1, d, d)
+    o_a, _ = step(st, q1, k1, v1, spec)
+    o_b, _ = step(st_full, q1, k1, v1, spec)
+    np.testing.assert_allclose(np.asarray(o_a), np.asarray(o_b),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_parse_rejects_softmax_impl_suffix():
     with pytest.raises(ValueError):
         AttentionSpec.parse("softmax-kernel")

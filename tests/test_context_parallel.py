@@ -1,0 +1,200 @@
+"""Context-parallel (seq-mode) tier (`cp` marker; `make test-cp`).
+
+The load-bearing contract: training attention sharded over a "seq" mesh
+axis — each device running the Pallas chunk scan on its contiguous token
+shard, seeded by ONE exclusive-prefix exchange of the constant-size moment
+carry, backward closed by the mirrored suffix exchange — produces the
+EXACT outputs and gradients of the single-device kernel, for both exchange
+implementations (ring / allgather), GQA included, p in {1, 2}.
+
+Multi-device cases need 8 host devices (REPRO_TEST_DEVICES=8, injected by
+conftest). The plan-selection and byte-model tests are host-only.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.kernels.sharded import (cp_boundary_model, cp_carry_bytes,
+                                   fastmax_sharded, pick_cp_exchange,
+                                   plan_kernel_sharding)
+
+pytestmark = pytest.mark.cp
+
+
+def mk(rng, b, hq, hkv, n, d, dv, dtype=jnp.float64):
+    q = jnp.asarray(rng.standard_normal((b, hq, n, d)) / np.sqrt(d), dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, n, d)) / np.sqrt(d), dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, n, dv)), dtype)
+    return q, k, v
+
+
+def _seq_mesh(cp, n_dev=8):
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh((n_dev // cp, cp), ("data", "seq"))
+
+
+def _plan(mesh, q, k, v):
+    return plan_kernel_sharding(mesh, batch=q.shape[0], hq=q.shape[1],
+                                hkv=k.shape[1], dv=v.shape[-1],
+                                seq_len=q.shape[2])
+
+
+def _oracle_grads(q, k, v, do, p, cs):
+    from repro.kernels import ops as kernel_ops
+
+    def f(q, k, v):
+        return kernel_ops.fastmax(q, k, v, p=p, causal=True, chunk_size=cs,
+                                  denom_eps=1e-6)
+
+    o, vjp_fn = jax.vjp(f, q, k, v)
+    return (o,) + vjp_fn(do)
+
+
+def _cp_grads(q, k, v, do, p, cs, plan):
+    def f(q, k, v):
+        return fastmax_sharded(q, k, v, p=p, causal=True, chunk_size=cs,
+                               denom_eps=1e-6, plan=plan)
+
+    o, vjp_fn = jax.vjp(f, q, k, v)
+    return (o,) + vjp_fn(do)
+
+
+# ---------------------------------------------------------------------------
+# exact parity vs the single-device kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cp", [2, 4])
+@pytest.mark.parametrize("p", [1, 2])
+def test_cp_grads_match_single_device_f64(shard_devices, monkeypatch, cp, p):
+    """CP=2/4 training fwd+bwd vs the single-device chunked-scan kernel,
+    f64 tight, GQA (Hq=4, Hkv=2), both exchange impls."""
+    rng = np.random.default_rng(10 + cp + 10 * p)
+    b, hq, hkv, n, d, dv, cs = 2, 4, 2, 128, 8, 8, 16
+    q, k, v = mk(rng, b, hq, hkv, n, d, dv)
+    do = jnp.asarray(rng.standard_normal((b, hq, n, dv)), jnp.float64)
+    ref = _oracle_grads(q, k, v, do, p, cs)
+
+    mesh = _seq_mesh(cp)
+    plan = _plan(mesh, q, k, v)
+    assert plan is not None and plan.mode == "seq" and plan.cp == cp
+    for impl in ("allgather", "ring"):
+        monkeypatch.setenv("REPRO_CP_EXCHANGE", impl)
+        got = _cp_grads(q, k, v, do, p, cs, plan)
+        for name, r, g in zip(("o", "dq", "dk", "dv"), ref, got):
+            err = float(jnp.max(jnp.abs(r - g)))
+            assert err < 1e-10, f"{name} impl={impl}: {err}"
+
+
+def test_cp_ring_matches_allgather(shard_devices, monkeypatch):
+    """The two exchange impls differ only in summation order: allclose,
+    and both within low-precision tolerance of the f32 oracle."""
+    rng = np.random.default_rng(3)
+    b, hq, hkv, n, d, dv, cs = 1, 2, 1, 64, 4, 8, 16
+    q, k, v = mk(rng, b, hq, hkv, n, d, dv, jnp.float32)
+    do = jnp.asarray(rng.standard_normal((b, hq, n, dv)), jnp.float32)
+    ref = _oracle_grads(q, k, v, do, 2, cs)
+
+    mesh = _seq_mesh(2)
+    plan = _plan(mesh, q, k, v)
+    outs = {}
+    for impl in ("allgather", "ring"):
+        monkeypatch.setenv("REPRO_CP_EXCHANGE", impl)
+        outs[impl] = _cp_grads(q, k, v, do, 2, cs, plan)
+    for name, a, r, f in zip(("o", "dq", "dk", "dv"),
+                             outs["allgather"], outs["ring"], ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   rtol=1e-5, atol=1e-5, err_msg=name)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(f),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+def test_cp_bf16_tolerance(shard_devices, monkeypatch):
+    """bf16 inputs stay within bf16-scale error of the f32 oracle under
+    CP (the carries accumulate in f32 inside the kernels)."""
+    rng = np.random.default_rng(4)
+    b, hq, hkv, n, d, dv, cs = 1, 2, 2, 64, 4, 4, 16
+    qf, kf, vf = mk(rng, b, hq, hkv, n, d, dv, jnp.float32)
+    q, k, v = (x.astype(jnp.bfloat16) for x in (qf, kf, vf))
+    dof = jnp.asarray(rng.standard_normal((b, hq, n, dv)), jnp.float32)
+    do = dof.astype(jnp.bfloat16)
+    ref = _oracle_grads(qf, kf, vf, dof, 2, cs)
+
+    mesh = _seq_mesh(2)
+    plan = _plan(mesh, q, k, v)
+    monkeypatch.setenv("REPRO_CP_EXCHANGE", "ring")
+    got = _cp_grads(q, k, v, do, 2, cs, plan)
+    for name, r, g in zip(("o", "dq", "dk", "dv"), ref, got):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(r), rtol=0.1, atol=0.1,
+                                   err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# plan selection
+# ---------------------------------------------------------------------------
+
+
+def test_plan_seq_mode_selection(shard_devices):
+    mesh = _seq_mesh(4)
+    # training-shaped call (seq_len passed, divisible) -> seq mode
+    plan = plan_kernel_sharding(mesh, batch=2, hq=4, hkv=2, dv=8,
+                                seq_len=128)
+    assert plan.mode == "seq" and plan.cp == 4 and plan.tp == 1
+    assert "shard_map[seq]" in plan.describe()
+    # no seq_len (decode/prefill callers) -> degenerate heads wrap
+    plan = plan_kernel_sharding(mesh, batch=2, hq=4, hkv=2, dv=8)
+    assert plan.mode == "heads" and plan.cp == 1
+    # indivisible sequence -> no seq mode either
+    plan = plan_kernel_sharding(mesh, batch=2, hq=4, hkv=2, dv=8,
+                                seq_len=130)
+    assert plan.mode == "heads"
+
+
+def test_plan_tp_wins_over_cp(shard_devices):
+    """CP×TP composition is deferred: with a 'model' axis > 1 the
+    head/feature modes win and the seq axis is left replicated-unused."""
+    from repro.launch.mesh import make_test_mesh
+    mesh = make_test_mesh((2, 2, 2), ("data", "model", "seq"))
+    plan = plan_kernel_sharding(mesh, batch=2, hq=4, hkv=2, dv=8,
+                                seq_len=128)
+    assert plan.mode == "heads" and plan.tp == 2 and plan.cp == 1
+    plan = plan_kernel_sharding(mesh, batch=2, hq=3, hkv=1, dv=8,
+                                seq_len=128)
+    assert plan.mode == "feature"
+
+
+# ---------------------------------------------------------------------------
+# boundary-bytes model (host-only)
+# ---------------------------------------------------------------------------
+
+
+def test_cp_carry_bytes_independent_of_n():
+    kw = dict(b=4, hkv=8, d=64, dv=64, p=2)
+    m_small = cp_boundary_model(n=4096, cp=8, **kw)
+    m_big = cp_boundary_model(n=1048576, cp=8, **kw)
+    # the moment-carry payload is O(D^2 Dv): constant in N
+    assert (m_small["carry_bytes_per_boundary"]
+            == m_big["carry_bytes_per_boundary"]
+            == cp_carry_bytes(itemsize=4, **kw))
+    # the ring-attention alternative rotates O(N/cp) KV rows: grows with N
+    assert (m_big["ring_attention_bytes_per_boundary"]
+            == 256 * m_small["ring_attention_bytes_per_boundary"])
+    # p=1 drops the dominant m2/g2 (D^2-scale) terms entirely
+    assert cp_carry_bytes(b=4, hkv=8, d=64, dv=64, p=1) * 10 \
+        < cp_carry_bytes(b=4, hkv=8, d=64, dv=64, p=2)
+
+
+def test_pick_cp_exchange_budget_and_override(monkeypatch):
+    monkeypatch.delenv("REPRO_CP_EXCHANGE", raising=False)
+    assert pick_cp_exchange(4, 1 << 20) == "allgather"   # 4 MB gathered
+    assert pick_cp_exchange(4, 1 << 30) == "ring"        # 4 GB gathered
+    monkeypatch.setenv("REPRO_CP_EXCHANGE", "ring")
+    assert pick_cp_exchange(4, 1 << 20) == "ring"
+    monkeypatch.setenv("REPRO_CP_EXCHANGE", "allgather")
+    assert pick_cp_exchange(4, 1 << 30) == "allgather"

@@ -150,6 +150,42 @@ def test_engine_slot_reuse_single_slot():
         np.testing.assert_array_equal(outs[rid], ref)
 
 
+def test_prefill_round_robin_interleaves():
+    """Two equal prompts admitted together must make chunk-for-chunk
+    progress (round-robin), not slot-0-to-completion-first (head-of-line
+    bias that inflates slot 1's TTFT) — and parity must survive the
+    interleaving."""
+    cfg, params = _setup("fastmax2-chunked")
+    rng = np.random.default_rng(7)
+    p0 = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    p1 = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    G = 4
+    ref0 = _ref(params, cfg, p0, G, 64)
+    ref1 = _ref(params, cfg, p1, G, 64)
+    eng = ServeEngine(params, cfg, max_slots=2, max_len=64, chunk=8)
+    r0 = eng.submit(p0, G)
+    r1 = eng.submit(p1, G)
+    eng.step()
+    eng.step()
+    # after two single-chunk ticks BOTH prompts have advanced; the biased
+    # lowest-slot-first scan would leave slot 1 still at position 0
+    pos = np.asarray(eng.slots.position)
+    assert pos[0] > 0 and pos[1] > 0, pos
+    outs = eng.run()
+    np.testing.assert_array_equal(outs[r0], ref0)
+    np.testing.assert_array_equal(outs[r1], ref1)
+
+
+def test_submit_rejects_empty_prompt_and_zero_gen():
+    cfg, params = _setup("fastmax2-chunked")
+    eng = ServeEngine(params, cfg, max_slots=1, max_len=64)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(np.zeros(0, np.int32), 4)
+    with pytest.raises(ValueError, match="max_new_tokens must be >= 1"):
+        eng.submit(np.arange(4, dtype=np.int32), 0)
+    assert eng.pending == 0            # nothing was enqueued
+
+
 # ---------------------------------------------------------------------------
 # prefix cache
 # ---------------------------------------------------------------------------
@@ -196,6 +232,38 @@ def test_prefix_cache_lru_byte_budget():
     cache.insert(np.arange(300, 308, dtype=np.int32), 4,
                  {"x": np.zeros(100, np.float32)})
     assert cache.bytes == 80
+
+
+def test_prefix_cache_stats_transitions():
+    """hits/misses/insertions/evictions move exactly when they should; in
+    particular a prompt too short to HAVE a cacheable prefix (< one chunk
+    past the boundary) is not a miss."""
+    cache = PrefixCache(byte_budget=100, chunk=4)
+    state = {"x": np.zeros(10, np.float32)}    # 40 bytes
+
+    # sub-chunk prompt: no key of length k*chunk < plen exists -> no miss
+    assert cache.lookup(np.arange(3, dtype=np.int32)) == (0, None)
+    assert cache.lookup(np.arange(4, dtype=np.int32)) == (0, None)
+    assert cache.stats()["misses"] == 0
+
+    # long enough to have a prefix, but cache is cold -> a real miss
+    p = np.arange(8, dtype=np.int32)
+    assert cache.lookup(p) == (0, None)
+    assert cache.stats()["misses"] == 1
+
+    cache.insert(p, 4, state)
+    assert cache.stats()["insertions"] == 1
+    m, snap = cache.lookup(p)                  # now a hit at m=4
+    assert m == 4 and snap is state
+    assert cache.stats() == {"entries": 1, "bytes": 40, "hits": 1,
+                             "misses": 1, "insertions": 1, "evictions": 0}
+
+    # two more 40-byte entries blow the 100-byte budget -> one eviction
+    cache.insert(np.arange(100, 108, dtype=np.int32), 4, state)
+    cache.insert(np.arange(200, 208, dtype=np.int32), 4, state)
+    st = cache.stats()
+    assert st["insertions"] == 3 and st["evictions"] == 1
+    assert st["entries"] == 2 and st["bytes"] == 80
 
 
 def test_prefix_cache_resume_is_strictly_shorter():
