@@ -1,8 +1,8 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-fast test-attention test-kernels test-shard test-serve \
-	test-cp dryrun-gate bench bench-json bench-serve bench-tpu ci-fast \
-	autotune autotune-check
+	test-faults test-cp dryrun-gate bench bench-json bench-serve bench-tpu \
+	ci-fast autotune autotune-check
 
 # full tier-1 suite (everything, incl. multi-minute subprocess compiles)
 test:
@@ -29,6 +29,14 @@ test-kernels:
 # slow-marked SSM-arch parity sweeps still run under `test`)
 test-serve:
 	$(PY) -m pytest -q -m "serve and not slow"
+
+# serving chaos tier: deterministic fault injection (NaN-into-slot,
+# raising callbacks, burst overload, deadlines, mid-stream cancel, wedged
+# ticks) — the engine must fail only the targeted request with the right
+# status while unaffected requests stay byte-identical to an undisturbed
+# run, and stalls surface as EngineStalled, never silent spins
+test-faults:
+	$(PY) -m pytest -q -m "faults and not slow"
 
 # multi-device tier: shard_map kernel parity + feature-TP scan grads on 8
 # forced host CPU devices (no TPU required; conftest injects XLA_FLAGS)
@@ -66,8 +74,8 @@ dryrun-gate:
 		--assert-kernel-route --out results/dryrun-gate
 
 # mirror the CI PR job locally (`.github/workflows/ci.yml` fast tier):
-# the five suites a PR must keep green, in the same order
-ci-fast: test-fast test-kernels test-shard test-cp test-serve
+# the six suites a PR must keep green, in the same order
+ci-fast: test-fast test-kernels test-shard test-cp test-serve test-faults
 
 bench:
 	$(PY) -m benchmarks.run --quick

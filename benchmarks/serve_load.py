@@ -17,6 +17,14 @@ Cells: softmax-KV baseline, fastmax2-chunked, fastmax2-kernel. Off-TPU the
 kernel cell routes decode to the jnp moment fallback and is labeled
 `interpret` (not comparable across platforms), matching attention_phases.
 
+A fourth `overload` cell drives a deliberately undersized engine (tiny
+slot pool, bounded queue) with arrivals above the service rate and commits
+the DEGRADATION counters — admitted / rejected (queue-full backpressure) /
+shed (sustained-saturation load shedding) / timed_out / completed — so
+regression checks see how the engine fails under pressure, not just
+happy-path latency. Arrivals are per-tick, so the counters are exactly
+deterministic (no `_us` timings in this cell).
+
 JSON results follow the benchmarks/run.py conventions and are committed as
 ``BENCH_serve.json``; re-runs print the fail-soft >20% regression summary.
 
@@ -42,10 +50,14 @@ def _workload(quick: bool):
     if quick:
         return dict(arch="qwen3-1.7b", n_requests=10, gen=8,
                     prompt_mix=(12, 24, 40), max_len=64, slots=4,
-                    mean_interarrival_ticks=2.0)
+                    mean_interarrival_ticks=2.0,
+                    overload=dict(offered=24, per_tick=2, slots=2,
+                                  max_queue=4, shed_after=4))
     return dict(arch="qwen3-1.7b", n_requests=32, gen=32,
                 prompt_mix=(64, 128, 256), max_len=512, slots=8,
-                mean_interarrival_ticks=4.0)
+                mean_interarrival_ticks=4.0,
+                overload=dict(offered=64, per_tick=2, slots=4,
+                              max_queue=8, shed_after=8))
 
 
 def _bench_backend(spec_name: str, w: dict, *, seed: int = 0) -> dict:
@@ -94,7 +106,7 @@ def _bench_backend(spec_name: str, w: dict, *, seed: int = 0) -> dict:
     drive()
     wall = time.perf_counter() - t0
 
-    fins = eng.history
+    fins = [f for f in eng.history if f.ok]   # terminal-status aware
     ttft = np.sort([f.ttft for f in fins])
     tpot = np.sort([(f.latency - f.ttft) / max(len(f.tokens) - 1, 1)
                     for f in fins])
@@ -113,6 +125,54 @@ def _bench_backend(spec_name: str, w: dict, *, seed: int = 0) -> dict:
     }
 
 
+def _bench_overload(w: dict, *, seed: int = 1) -> dict:
+    """Degradation cell: arrivals above the service rate of an undersized
+    engine. Tick-based arrivals + no deadlines -> every counter below is
+    exactly reproducible run-to-run."""
+    import jax
+
+    from repro.attention import AttentionSpec
+    from repro.configs import get_smoke_config
+    from repro.models import init_model
+    from repro.serve import EngineOverloaded, ServeEngine
+
+    o = w["overload"]
+    cfg = get_smoke_config(w["arch"])
+    cfg = dataclasses.replace(cfg,
+                              attn=AttentionSpec.parse("fastmax2-chunked"))
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            rng.choice(w["prompt_mix"])).astype(np.int32)
+               for _ in range(o["offered"])]
+
+    eng = ServeEngine(params, cfg, max_slots=o["slots"],
+                      max_len=w["max_len"], max_queue=o["max_queue"],
+                      shed_after=o["shed_after"])
+    i = 0
+    while i < len(prompts) or eng.pending:
+        for _ in range(o["per_tick"]):     # offered rate > service rate
+            if i < len(prompts):
+                try:
+                    eng.submit(prompts[i], w["gen"])
+                except EngineOverloaded:
+                    pass                   # counted in eng.stats()
+                i += 1
+        eng.step()
+
+    st = eng.stats()
+    return {
+        "offered": o["offered"],
+        "admitted": st["admitted"],
+        "completed": st["finished"],
+        "rejected": st["rejected"],
+        "shed": st["shed"],
+        "timed_out": st["timed_out"],
+        "quarantined": st["quarantined"],
+        "ticks": st["ticks"],
+    }
+
+
 def collect(quick: bool = True) -> dict:
     """Structured results: {meta, suites: {backend: {metric: value}}}."""
     import jax
@@ -125,6 +185,9 @@ def collect(quick: bool = True) -> dict:
             # off-TPU the kernel decode path is the jnp fallback — label the
             # cell so regression checks never compare it across platforms
             suites[name]["interpret"] = True
+    # degradation counters only (no `_us` keys), so regression_summary
+    # reports structure changes without timing comparisons
+    suites["overload"] = _bench_overload(w)
     return {
         "meta": {"platform": jax.default_backend(), "quick": quick,
                  "workload": w},
@@ -134,6 +197,8 @@ def collect(quick: bool = True) -> dict:
 
 def rows(results: dict):
     for backend, metrics in results["suites"].items():
+        if "saturation_tok_s" not in metrics:
+            continue   # counters-only cell (overload) has no timings
         tput = metrics["saturation_tok_s"]
         for key, val in metrics.items():
             if key.endswith("_us"):

@@ -1,11 +1,14 @@
 """Serving example: continuous batching with O(1)-in-context slot state.
 
-Three views of the same engine (docs/serving.md):
+Four views of the same engine (docs/serving.md):
   1. continuous batching — requests of different lengths admitted into a
      fixed slot pool, chunked prefill interleaved with batched decode;
   2. per-token streaming via `ServeEngine.stream`;
   3. the memory asymmetry — a fastmax slot costs the same bytes at 64 or
-     8192 context, while the softmax KV baseline grows linearly.
+     8192 context, while the softmax KV baseline grows linearly;
+  4. the fault envelope — every request ends in a terminal RequestStatus
+     (cancel() mid-flight, bounded-queue rejection), and engine.stats()
+     exposes the lifecycle counters.
 
 Run: PYTHONPATH=src python examples/serve.py
 """
@@ -34,7 +37,7 @@ outs = eng.run()
 for rid in rids:
     print(f"request {rid}: {len(outs[rid])} tokens  {outs[rid][:8]}")
 for fin in eng.history:
-    print(f"  rid {fin.rid}: prompt {fin.prompt_len:3d}  "
+    print(f"  rid {fin.rid}: {fin.status.value:9s} prompt {fin.prompt_len:3d}  "
           f"ttft {fin.ttft * 1e3:6.1f} ms  latency {fin.latency * 1e3:6.1f} ms")
 
 # -- 2. streaming: tokens yielded as the pool produces them ---------------
@@ -47,3 +50,23 @@ print(f"{'ctx':>6} {'fastmax slot':>14} {'softmax slot':>14}")
 for ctx in (64, 512, 8192):
     print(f"{ctx:6d} {decode_state_bytes(cfg, 1, ctx):14,d} "
           f"{decode_state_bytes(soft, 1, ctx):14,d}")
+
+# -- 4. the fault envelope: terminal statuses + lifecycle counters --------
+from repro.serve import EngineOverloaded
+
+r_cancel = eng.submit(rng.integers(0, cfg.vocab_size, 20).astype(np.int32),
+                      max_new_tokens=64)
+eng.step(); eng.step()                    # mid-decode...
+eng.cancel(r_cancel)                      # ...and gone; its slot is free
+print(f"cancelled rid {r_cancel}: status={eng.status(r_cancel)}")
+
+tiny = ServeEngine(params, cfg, max_slots=1, max_len=128, max_queue=1)
+tiny.submit(rng.integers(0, cfg.vocab_size, 12).astype(np.int32), 4)
+tiny.step()                               # first request takes the slot
+tiny.submit(rng.integers(0, cfg.vocab_size, 12).astype(np.int32), 4)
+try:                                      # slot busy + queue full
+    tiny.submit(rng.integers(0, cfg.vocab_size, 12).astype(np.int32), 4)
+except EngineOverloaded as e:
+    print(f"backpressure: {e}")
+tiny.run()
+print("stats:", {k: v for k, v in tiny.stats().items() if isinstance(v, int)})

@@ -12,7 +12,10 @@ Two paths:
                    lockstep greedy decode (optionally eos-early-stopped).
   --serve-engine   `repro.serve.ServeEngine` — continuous batching over a
                    slot pool: staggered admissions, chunked prefill mixed
-                   with decode, per-request streaming. See docs/serving.md.
+                   with decode, per-request streaming, plus the fault
+                   envelope (--max-queue backpressure, --ttft-deadline /
+                   --deadline timeouts; the driver prints the lifecycle
+                   counters from engine.stats()). See docs/serving.md.
 
 Usage (CPU, reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
@@ -74,6 +77,25 @@ def generate(params, cfg, prompts: jnp.ndarray, n_gen: int,
     return jnp.stack(out, axis=1)
 
 
+def _submit_all(eng, prompts, n_gen, args):
+    """Submit the batch, absorbing backpressure: a bounded queue
+    (--max-queue) rejects at submit time with EngineOverloaded, and we
+    drain a tick and retry rather than crash the driver."""
+    from repro.serve import EngineOverloaded
+
+    rids = []
+    for p in np.asarray(prompts):
+        while True:
+            try:
+                rids.append(eng.submit(
+                    p, n_gen, ttft_deadline=args.ttft_deadline,
+                    deadline=args.deadline))
+                break
+            except EngineOverloaded:
+                eng.step()   # make room, then retry this prompt
+    return rids
+
+
 def _run_engine(params, cfg, prompts, n_gen, args):
     """Continuous-batching path: submit the batch as staggered requests."""
     from repro.serve import ServeEngine
@@ -82,10 +104,11 @@ def _run_engine(params, cfg, prompts, n_gen, args):
     eng = ServeEngine(
         params, cfg, max_slots=args.slots, max_len=max_len,
         eos_id=args.eos_id, policy=args.policy,
-        prefix_cache_bytes=args.prefix_cache_mb << 20)
-    rids = [eng.submit(p, n_gen) for p in np.asarray(prompts)]
+        prefix_cache_bytes=args.prefix_cache_mb << 20,
+        max_queue=args.max_queue)
+    rids = _submit_all(eng, prompts, n_gen, args)
     outs = eng.run()
-    return eng, [outs[r] for r in rids]
+    return eng, [outs.get(r, []) for r in rids]
 
 
 def main(argv=None):
@@ -102,6 +125,15 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--policy", default="fcfs", choices=("fcfs", "lpf"))
     ap.add_argument("--prefix-cache-mb", type=int, default=0)
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="bounded admission queue depth; submits beyond it "
+                         "raise EngineOverloaded (0 = unbounded)")
+    ap.add_argument("--ttft-deadline", type=float, default=None,
+                    help="seconds from submit to first token before the "
+                         "request is timed out")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="seconds from submit to completion before the "
+                         "request is timed out")
     args = ap.parse_args(argv)
 
     import dataclasses
@@ -129,16 +161,24 @@ def main(argv=None):
         # reuses the same engine (and therefore its jit caches)
         eng, _ = _run_engine(params, cfg, prompts, args.gen, args)
         t0 = time.monotonic()
-        rids = [eng.submit(p, args.gen) for p in np.asarray(prompts)]
+        rids = _submit_all(eng, prompts, args.gen, args)
         outs = eng.run()
         dt = time.monotonic() - t0
-        n_tok = sum(len(outs[r]) for r in rids)
-        ttfts = sorted(f.ttft for f in eng.history[-len(rids):])
+        n_tok = sum(len(outs.get(r, [])) for r in rids)
+        ttfts = sorted(f.ttft for f in eng.history[-len(rids):]
+                       if f.ttft is not None)
+        ttft_ms = (f"{ttfts[len(ttfts) // 2] * 1e3:.1f}ms"
+                   if ttfts else "n/a")
+        st = eng.stats()
         print(f"[engine] generated {n_tok} tokens in {dt:.2f}s "
-              f"({n_tok / dt:.1f} tok/s)  ttft p50 "
-              f"{ttfts[len(ttfts) // 2] * 1e3:.1f}ms  "
+              f"({n_tok / dt:.1f} tok/s)  ttft p50 {ttft_ms}  "
               f"slot bytes {eng.slots.state_bytes_per_slot()}  sample: "
               f"{outs[rids[0]][:16]}")
+        print(f"[engine] lifecycle: finished {st['finished']}  "
+              f"failed {st['failed']}  cancelled {st['cancelled']}  "
+              f"timed_out {st['timed_out']}  rejected {st['rejected']}  "
+              f"shed {st['shed']}  quarantined {st['quarantined']}  "
+              f"ticks {st['ticks']}")
         return
 
     # warmup: trace + compile out of the timed region (jits are cached

@@ -1,15 +1,31 @@
 """Continuous-batching serving engine (FAST's O(1)-state decode, served).
 
-    engine.ServeEngine   submit()/step()/stream(): mixed chunked-prefill +
-                         batched-decode ticks over a fixed slot pool
+    engine.ServeEngine   submit()/step()/stream()/cancel(): mixed
+                         chunked-prefill + batched-decode ticks over a
+                         fixed slot pool, with admission control,
+                         deadlines, non-finite quarantine, and a watchdog
     slots.SlotManager    slot-indexed decode state, O(1) admit/evict
-    scheduler.Scheduler  fcfs / longest-prefill-first admission
+    scheduler.Scheduler  fcfs / longest-prefill-first admission over a
+                         bounded queue (depth + prompt-token budget)
     prefix_cache         prompt-prefix snapshot reuse (LRU byte budget)
+    errors               request lifecycle statuses + structured failures
+    faults.FaultInjector deterministic chaos harness (`make test-faults`)
 """
 from repro.serve.engine import FinishedRequest, ServeEngine  # noqa: F401
+from repro.serve.errors import (  # noqa: F401
+    EngineOverloaded,
+    EngineStalled,
+    RequestStatus,
+    RequestTimeout,
+    ServeError,
+    SlotQuarantined,
+)
+from repro.serve.faults import FaultInjector  # noqa: F401
 from repro.serve.prefix_cache import PrefixCache  # noqa: F401
 from repro.serve.scheduler import Request, Scheduler  # noqa: F401
 from repro.serve.slots import SlotManager  # noqa: F401
 
 __all__ = ["ServeEngine", "FinishedRequest", "PrefixCache", "Request",
-           "Scheduler", "SlotManager"]
+           "Scheduler", "SlotManager", "RequestStatus", "ServeError",
+           "EngineOverloaded", "EngineStalled", "RequestTimeout",
+           "SlotQuarantined", "FaultInjector"]

@@ -94,6 +94,21 @@ class PrefixCache:
             self.bytes -= nb
             self.evictions += 1
 
+    def invalidate(self, prompt: np.ndarray) -> int:
+        """Drop every cached snapshot keyed by a chunk-boundary prefix of
+        `prompt`. Used when the request that produced the snapshots is
+        cancelled (its device references should be released) or its slot is
+        quarantined (snapshots taken from a poisoned slot must never seed
+        another request). Returns the number of entries removed."""
+        removed = 0
+        for m in range(self.chunk, len(prompt) + 1, self.chunk):
+            ent = self._entries.pop(prefix_key(prompt, m), None)
+            if ent is not None:
+                self.bytes -= ent[2]
+                self.evictions += 1
+                removed += 1
+        return removed
+
     def stats(self) -> dict:
         return {"entries": len(self._entries), "bytes": self.bytes,
                 "hits": self.hits, "misses": self.misses,

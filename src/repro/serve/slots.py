@@ -165,6 +165,16 @@ class SlotManager:
         self.eos[slot] = False
         self.position[slot] = 0
 
+    def quarantine(self, slot: int):
+        """Free a slot AND re-initialize its device state from the fresh
+        template. Unlike `evict`, the state write matters here: a poisoned
+        slot (NaN/Inf leaves) must not sit in the pool where a deep state
+        check (`REPRO_SERVE_CHECK_STATE=1`) or a leaky select would see it.
+        The slot is immediately reusable."""
+        self.state = self._write(self.state, self.fresh_unit,
+                                 jnp.asarray(slot, jnp.int32))
+        self.evict(slot)
+
     def snapshot(self, slot: int):
         """Batch-1 copy of a slot's state (prefix cache entries)."""
         return self._read(self.state, jnp.asarray(slot, jnp.int32))
