@@ -1,8 +1,8 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-fast test-attention test-kernels test-shard test-serve \
-	test-faults test-cp dryrun-gate bench bench-json bench-serve bench-tpu \
-	ci-fast autotune autotune-check
+	test-faults test-cp test-hybrid dryrun-gate bench bench-json \
+	bench-serve bench-tpu ci-fast autotune autotune-check
 
 # full tier-1 suite (everything, incl. multi-minute subprocess compiles)
 test:
@@ -50,6 +50,12 @@ test-cp:
 	REPRO_TEST_DEVICES=8 $(PY) -m pytest -q -m cp \
 		tests/test_context_parallel.py
 
+# hybrid near/far-field tier: banded-softmax+moments vs the composed
+# dense oracle (fwd + grads), window edge cases (w=0 bitwise fastmax,
+# w>=N exact softmax), chunked-prefill/decode lockstep, serve parity
+test-hybrid:
+	$(PY) -m pytest -q -m "hybrid and not slow"
+
 # sharding-health gate: the cells the shard-native work must keep clean —
 # 0 involuntary remats on train_4k (feature-TP scan AND the feature-TP
 # kernel training path) and decode_32k, decode routed to the shard_map
@@ -57,7 +63,11 @@ test-cp:
 # shard_map[feature] Dv-blocked kernels (no chunked-scan fallback), and
 # 1M-token context-parallel training (--cp 16) routed shard_map[seq]
 # with 0 remats — its cell JSON records the modeled constant-size
-# carry-exchange bytes next to the ring-attention O(N*D) alternative
+# carry-exchange bytes next to the ring-attention O(N*D) alternative;
+# hybrid2-kernel training routed shard_map[feature] with 0 remats; and
+# whisper-small (12 heads, indivisible by TP=16) proving noncausal
+# encoder attention routes the feature-mode kernel wrap, not the
+# chunked-scan fallback
 dryrun-gate:
 	$(PY) -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k \
 		--assert-no-remat --out results/dryrun-gate
@@ -72,10 +82,17 @@ dryrun-gate:
 	$(PY) -m repro.launch.dryrun --arch qwen3-1.7b --shape train_1M \
 		--cp 16 --attn fastmax2-kernel --assert-no-remat \
 		--assert-kernel-route --out results/dryrun-gate
+	$(PY) -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k \
+		--attn hybrid2-kernel --assert-no-remat --assert-kernel-route \
+		--out results/dryrun-gate
+	$(PY) -m repro.launch.dryrun --arch whisper-small --shape train_4k \
+		--attn fastmax2-kernel --assert-kernel-route \
+		--out results/dryrun-gate
 
 # mirror the CI PR job locally (`.github/workflows/ci.yml` fast tier):
-# the six suites a PR must keep green, in the same order
-ci-fast: test-fast test-kernels test-shard test-cp test-serve test-faults
+# the seven suites a PR must keep green, in the same order
+ci-fast: test-fast test-kernels test-shard test-cp test-serve test-faults \
+	test-hybrid
 
 bench:
 	$(PY) -m benchmarks.run --quick

@@ -23,7 +23,10 @@ import numpy as np
 
 from benchmarks.common import csv_row, time_fn
 
-SPECS = ("softmax", "fastmax2", "fastmax2-kernel")
+# hybrid2-kernel: near/far-field backend — prefill/backward go through the
+# hybrid Pallas kernel (interpret off-TPU), decode through the two-leg jnp
+# state step (moments + rolling window), tracked like every other cell
+SPECS = ("softmax", "fastmax2", "fastmax2-kernel", "hybrid2-kernel")
 
 # TP>1 decode cell: the shard_map-wrapped Pallas decode kernel vs the jnp
 # feature-TP moment step it replaced as the tensor-parallel serving path.

@@ -43,7 +43,11 @@ import numpy as np
 
 from benchmarks.common import csv_row
 
-BACKENDS = ("softmax", "fastmax2-chunked", "fastmax2-kernel")
+# hybrid2-chunked: the near/far-field backend — slot bytes sit between the
+# constant fastmax moments and the linear softmax KV (moments + a fixed
+# W-slot window cache, still O(1) in context length)
+BACKENDS = ("softmax", "fastmax2-chunked", "fastmax2-kernel",
+            "hybrid2-chunked")
 
 
 def _workload(quick: bool):

@@ -9,6 +9,14 @@ Importing this module registers:
   fastmax-chunked  — TPU-native chunked prefix scan (production default);
                      exact kv masking, feature-TP, §2.5 custom backward.
   fastmax-kernel   — Pallas TPU kernels; interprets off-TPU.
+  hybrid-chunked   — FMMformer-style near/far field: exact softmax over a
+                     width-`spec.window` causal band + fastmax moments
+                     off-band, one normalizer (repro.core.hybrid). Causal
+                     only; exact kv masking, feature-TP, §2.5+band custom
+                     backward. window=0 degenerates bitwise to fastmax.
+  hybrid-kernel    — fused Pallas launch for the hybrid forward
+                     (kernels/hybrid_causal.py) with the jnp band-extended
+                     reverse scan as backward; interprets off-TPU.
 
 All fns share one signature:
   fn(q, k, v, spec, *, causal, kv_mask, rng, feature_shard) -> o
@@ -109,17 +117,25 @@ def _kernel_fn(q, k, v, spec: AttentionSpec, *, causal, kv_mask, rng,
             else None)
         if plan is not None and (plan.mode == "heads"
                                  or (causal and (plan.mode == "seq"
-                                                 or use_pallas_bwd()))):
+                                                 or use_pallas_bwd()))
+                                 or (not causal
+                                     and plan.mode == "feature")):
             # heads mode: fwd AND the fused Pallas bwd run shard-local per
             # (batch, kv-head) — autodiff of the shard_map applies the
             # custom_vjp per shard. feature mode (causal): the Dv-blocked
             # kernels run per value-feature shard — forward collective-
             # free, backward with one psum of the partial dq/dk per
             # launch; REPRO_FASTMAX_BWD=jnp restores the sharding-aware
-            # chunked scan (the equivalence oracle). seq mode (context
-            # parallelism): each device scans its sequence shard, one
-            # constant-size moment exchange per direction — both backward
-            # backends support the seeded carry, so it routes either way.
+            # chunked scan (the equivalence oracle). feature mode
+            # (noncausal): shard_map wrap of the two-phase noncausal
+            # kernel — the global moments are Dv-decomposable and its den
+            # comes from replicated k, so each shard's output slice is
+            # exact and collective-free; training autodiffs the wrap (the
+            # op pairs a jnp moment backward, shard_map psums dq/dk). seq
+            # mode (context parallelism): each device scans its sequence
+            # shard, one constant-size moment exchange per direction —
+            # both backward backends support the seeded carry, so it
+            # routes either way.
             from repro.kernels.sharded import fastmax_sharded
             _log_once(f"attention: fastmax-kernel {plan.describe()}")
             qh = normalize_qk(q) if spec.normalize else q
@@ -127,14 +143,12 @@ def _kernel_fn(q, k, v, spec: AttentionSpec, *, causal, kv_mask, rng,
             return fastmax_sharded(qh, kh, v, p=spec.p, causal=causal,
                                    chunk_size=spec.chunk_size,
                                    denom_eps=spec.denom_eps, plan=plan)
-        # unpartitionable mesh (kv heads AND Dv indivisible), noncausal
-        # feature-TP, or the jnp backward oracle: sharding-aware chunked
-        # scan
+        # unpartitionable mesh (kv heads AND Dv indivisible) or the jnp
+        # backward oracle: sharding-aware chunked scan
         _log_once(
             "attention: fastmax-kernel under 'model' mesh without a "
-            "kernel-shardable plan for this call (unpartitionable dims, "
-            "noncausal feature-TP, or REPRO_FASTMAX_BWD=jnp) "
-            "-> chunked scan (feature-TP)")
+            "kernel-shardable plan for this call (unpartitionable dims "
+            "or REPRO_FASTMAX_BWD=jnp) -> chunked scan (feature-TP)")
         return _chunked_fn(q, k, v, spec, causal=causal, kv_mask=None,
                            rng=None, feature_shard=feature_shard)
     qh = normalize_qk(q) if spec.normalize else q
@@ -142,6 +156,69 @@ def _kernel_fn(q, k, v, spec: AttentionSpec, *, causal, kv_mask, rng,
     return kernel_ops.fastmax(qh, kh, v, p=spec.p, causal=causal,
                               chunk_size=spec.chunk_size,
                               denom_eps=spec.denom_eps)
+
+
+def _hybrid_chunked_fn(q, k, v, spec: AttentionSpec, *, causal, kv_mask, rng,
+                       feature_shard):
+    from repro.core.fastmax import normalize_qk
+    from repro.core.hybrid import hybrid_causal_chunked
+
+    del rng
+    if not causal:
+        raise ValueError("hybrid attention is causal-only")
+    spec = spec.resolved()
+    qh = normalize_qk(q) if spec.normalize else q
+    kh = normalize_qk(k) if spec.normalize else k
+    # w_eff=0 delegates (inside hybrid_causal_chunked) to the fastmax
+    # chunked scan with identical arguments — bitwise fastmax parity
+    return hybrid_causal_chunked(
+        qh, kh, v, p=spec.p, window=spec.window, chunk_size=spec.chunk_size,
+        kv_mask=kv_mask, denom_eps=spec.denom_eps,
+        custom_grad=spec.custom_grad, feature_shard=feature_shard)
+
+
+def _hybrid_kernel_fn(q, k, v, spec: AttentionSpec, *, causal, kv_mask, rng,
+                      feature_shard):
+    from repro.attention.registry import _log_once
+    from repro.core.fastmax import normalize_qk
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels.sharded import nontrivial_mesh, plan_kernel_sharding
+
+    del kv_mask, rng
+    if not causal:
+        raise ValueError("hybrid attention is causal-only")
+    spec = spec.resolved()
+    mesh = nontrivial_mesh()
+    if mesh is not None:
+        # heads mode: the fused hybrid launch runs shard-local per
+        # (batch, kv-head). feature mode: the Dv-blocked forward emits its
+        # carry per value-feature shard and the band-extended jnp reverse
+        # scan closes the backward with one psum of partial dq/dk — the
+        # band denominator is Dv-independent (it comes from replicated
+        # q/k), so each shard's output slice is exact. No seq mode: the
+        # hybrid family is not context-parallel-wired yet.
+        plan = plan_kernel_sharding(
+            mesh, batch=q.shape[0], hq=q.shape[1], hkv=k.shape[1],
+            dv=v.shape[-1])
+        if plan is not None and plan.mode in ("heads", "feature"):
+            from repro.kernels.sharded import hybrid_sharded
+            _log_once(f"attention: hybrid-kernel {plan.describe()}")
+            qh = normalize_qk(q) if spec.normalize else q
+            kh = normalize_qk(k) if spec.normalize else k
+            return hybrid_sharded(qh, kh, v, p=spec.p, window=spec.window,
+                                  chunk_size=spec.chunk_size,
+                                  denom_eps=spec.denom_eps, plan=plan)
+        _log_once(
+            "attention: hybrid-kernel under 'model' mesh without a "
+            "kernel-shardable plan for this call (unpartitionable dims) "
+            "-> chunked scan (feature-TP)")
+        return _hybrid_chunked_fn(q, k, v, spec, causal=causal, kv_mask=None,
+                                  rng=None, feature_shard=feature_shard)
+    qh = normalize_qk(q) if spec.normalize else q
+    kh = normalize_qk(k) if spec.normalize else k
+    return kernel_ops.hybrid(qh, kh, v, p=spec.p, window=spec.window,
+                             causal=causal, chunk_size=spec.chunk_size,
+                             denom_eps=spec.denom_eps)
 
 
 register(Backend(
@@ -183,9 +260,9 @@ register(Backend(
 # wrapped (`repro.kernels.sharded`) — heads mode when kv heads divide the
 # axis, else feature mode with the Dv-blocked backward launched per value-
 # feature shard (causal training included; one psum of the partial dq/dk
-# per launch). Only unpartitionable dims, noncausal feature-TP calls, or
-# REPRO_FASTMAX_BWD=jnp fall back to the sharding-aware chunked scan,
-# honoring the flag.
+# per launch; noncausal feature-TP wraps the kernel whose op pairs a jnp
+# moment backward). Only unpartitionable dims or REPRO_FASTMAX_BWD=jnp
+# fall back to the sharding-aware chunked scan, honoring the flag.
 register(Backend(
     name="fastmax-kernel",
     family="fastmax",
@@ -194,4 +271,25 @@ register(Backend(
                       platforms=("tpu",), interpretable=True),
     fn=_kernel_fn,
     fallback="fastmax-chunked",   # kv_mask / dropout reroute through chunked
+))
+
+register(Backend(
+    name="hybrid-chunked",
+    family="hybrid",
+    caps=Capabilities(noncausal=False, decode=True, kv_mask=True,
+                      feature_shard=True, custom_grad=True),
+    fn=_hybrid_chunked_fn,
+))
+
+# decode_kernel stays False: hybrid decode state carries a rolling window
+# KV cache alongside the moments, which the fused decode kernels don't
+# model — prefill/step run the jnp protocol paths (repro.attention.state).
+register(Backend(
+    name="hybrid-kernel",
+    family="hybrid",
+    caps=Capabilities(noncausal=False, decode=True, custom_grad=True,
+                      feature_shard=True,
+                      platforms=("tpu",), interpretable=True),
+    fn=_hybrid_kernel_fn,
+    fallback="hybrid-chunked",    # kv_mask reroutes through chunked
 ))

@@ -187,7 +187,7 @@ def resolve(spec: AttentionSpec, *, causal: bool = False,
                 f"-> routing to {nxt.name}")
             return resolve(
                 dataclasses.replace(spec, impl=nxt.name.split("-")[-1])
-                if backend.family == "fastmax" else spec,
+                if backend.family in ("fastmax", "hybrid") else spec,
                 causal=causal, dropout=dropout, kv_mask=kv_mask, gqa=gqa,
                 strict=strict)
         else:

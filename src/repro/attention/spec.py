@@ -2,21 +2,25 @@
 
 Replaces the seed's stringly-typed `attn_backend`/`attn_impl` pair, the
 13-kwarg `fastmax_attention()` surface, and the unused `FastmaxConfig`
-NamedTuple. A spec names a *family* (softmax | fastmax), the polynomial
-order `p` for fastmax, and the *impl* schedule within the family; the
-registry (`repro.attention.registry`) maps `spec.backend_name` to a
-registered backend and routes around missing capabilities.
+NamedTuple. A spec names a *family* (softmax | fastmax | hybrid), the
+polynomial order `p` for fastmax, and the *impl* schedule within the
+family; the registry (`repro.attention.registry`) maps
+`spec.backend_name` to a registered backend and routes around missing
+capabilities.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
-__all__ = ["AttentionSpec", "FAMILIES", "IMPLS"]
+__all__ = ["AttentionSpec", "FAMILIES", "IMPLS", "HYBRID_IMPLS"]
 
-FAMILIES = ("softmax", "fastmax")
+FAMILIES = ("softmax", "fastmax", "hybrid")
 # impl schedules within the fastmax family (softmax has a single impl)
 IMPLS = ("oracle", "rowwise", "chunked", "kernel")
+# the hybrid family has no rowwise/oracle schedule (its jnp oracle is the
+# composed reference in repro.core.hybrid, exercised by tests directly)
+HYBRID_IMPLS = ("chunked", "kernel")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,14 +28,25 @@ class AttentionSpec:
     """Static, hashable configuration of one attention operator.
 
     Fields:
-      family:       "softmax" (paper baseline) or "fastmax" (the paper's
-                    factorizable polynomial attention).
+      family:       "softmax" (paper baseline), "fastmax" (the paper's
+                    factorizable polynomial attention), or "hybrid"
+                    (FMMformer-style near/far field: exact softmax over a
+                    width-`window` causal band + fastmax moments off-band,
+                    combined in one normalizer).
       p:            polynomial order of the fastmax kernel (paper: 1 or 2).
       impl:         schedule within the family — "oracle" (O(N^2) reference),
                     "rowwise" (paper's per-row prefix moments), "chunked"
                     (TPU-native chunked prefix scan), "kernel" (Pallas).
+                    hybrid supports "chunked" and "kernel".
       chunk_size:   chunk length for the scan schedules; None inherits the
                     caller's default (ModelConfig.chunk_size / 128).
+      window:       hybrid only — width of the exact near-field band,
+                    *including* the diagonal (a token always sees itself
+                    exactly). The effective band is clamped to one chunk:
+                    w_eff = min(window, chunk_size); widening the band past
+                    the chunk length requires raising chunk_size. window=0
+                    degenerates bitwise to fastmax; w_eff >= N is exact
+                    softmax over normalized q/k.
       normalize:    statistical q/k normalization (paper Eqs. 5-6).
       denom_eps:    guard for p=1's sign-indefinite denominator.
       custom_grad:  paper §2.5 memory-reduced backward (chunked/kernel).
@@ -44,6 +59,7 @@ class AttentionSpec:
     p: int = 2
     impl: str = "chunked"
     chunk_size: Optional[int] = None
+    window: int = 64
     normalize: bool = True
     denom_eps: float = 1e-6
     custom_grad: bool = True
@@ -62,6 +78,16 @@ class AttentionSpec:
                     f"expected one of {IMPLS}")
             if self.p not in (1, 2):
                 raise ValueError(f"fastmax p must be 1 or 2, got {self.p}")
+        if self.family == "hybrid":
+            if self.impl not in HYBRID_IMPLS:
+                raise ValueError(
+                    f"unknown hybrid impl {self.impl!r}; "
+                    f"expected one of {HYBRID_IMPLS}")
+            if self.p not in (1, 2):
+                raise ValueError(f"hybrid p must be 1 or 2, got {self.p}")
+            if self.window < 0:
+                raise ValueError(
+                    f"hybrid window must be >= 0, got {self.window}")
         if self.dropout_mode not in ("quadratic", "1d", "none"):
             raise ValueError(f"unknown dropout_mode {self.dropout_mode!r}")
 
@@ -72,7 +98,7 @@ class AttentionSpec:
         """Registry name of the backend this spec requests."""
         if self.family == "softmax":
             return "softmax"
-        return f"fastmax-{self.impl}"
+        return f"{self.family}-{self.impl}"
 
     @property
     def legacy_name(self) -> str:
@@ -80,11 +106,13 @@ class AttentionSpec:
         "fastmax2") — kept for result-JSON/back-compat labels only."""
         if self.family == "softmax":
             return "softmax"
-        return f"fastmax{self.p}"
+        return f"{self.family}{self.p}"
 
     def __str__(self) -> str:
         if self.family == "softmax":
             return "softmax"
+        if self.family == "hybrid":
+            return f"hybrid{self.p}/{self.impl}/w{self.window}"
         return f"fastmax{self.p}/{self.impl}"
 
     # -- construction helpers ----------------------------------------------
@@ -94,8 +122,9 @@ class AttentionSpec:
         """Parse a CLI-style operator name into a spec.
 
         Accepted: "softmax", "fastmax" (p=2), "fastmax1", "fastmax2",
-        registry names ("fastmax-chunked", ...), and "<family>[p][-impl]"
-        combinations such as "fastmax1-kernel". None -> default spec.
+        "hybrid"/"hybrid1"/"hybrid2", registry names ("fastmax-chunked",
+        "hybrid-kernel", ...), and "<family>[p][-impl]" combinations such
+        as "fastmax1-kernel" or "hybrid2-kernel". None -> default spec.
         """
         if name is None:
             return cls(**overrides)
@@ -113,6 +142,10 @@ class AttentionSpec:
             if base != "fastmax":
                 kw.setdefault("p", int(base[-1]))
             return cls(family="fastmax", **kw)
+        if base in ("hybrid", "hybrid1", "hybrid2"):
+            if base != "hybrid":
+                kw.setdefault("p", int(base[-1]))
+            return cls(family="hybrid", **kw)
         raise ValueError(f"cannot parse attention operator name {name!r}")
 
     def with_flags(self, backend: Optional[str] = None,

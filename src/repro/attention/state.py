@@ -5,9 +5,15 @@ One streaming-inference surface for every backend family:
   softmax  -> `KVCache` (O(N) per sequence, the baseline's cost)
   fastmax  -> `Moments` (O(D^2 Dv) per kv head, INDEPENDENT of context —
               the paper's asymptotic punchline at inference)
+  hybrid   -> BOTH legs: the fastmax moments plus a fixed-size rolling
+              window `KVCache` of the last W = min(spec.window,
+              chunk_size) tokens (the exact near-field band) — still
+              O(1) in context length. W=0 carries moments only
+              (bitwise fastmax).
 
 `AttnState` is the union carried through the model's scan-over-layers;
-exactly one of (kv, moments) is populated. This protocol subsumes the seed's
+at most one of (kv, moments) is populated — except the hybrid family,
+which carries both. This protocol subsumes the seed's
 `repro.core.decode_state` module and the per-backend decode branches that
 lived in `repro.models.layers`.
 
@@ -38,6 +44,8 @@ from repro.attention.api import feature_shard_flag
 from repro.attention.registry import _log_once, resolve
 from repro.attention.spec import AttentionSpec
 from repro.core.decode_state import init_fastmax_state
+from repro.core.hybrid import _hybrid_scan, effective_window, roll_window
+from repro.core.ref import poly_kernel
 from repro.core.fastmax import (
     Moments,
     _causal_scan,
@@ -119,12 +127,28 @@ class KVCache(NamedTuple):
 
 
 class AttnState(NamedTuple):
-    """Union decode state: exactly one of (kv, moments) is used."""
+    """Union decode state. softmax uses `kv`, fastmax uses `moments`;
+    hybrid uses both (`kv` is the rolling near-field window, W slots)."""
     kv: Optional[KVCache]
     moments: Optional[Moments]
 
 
+def _window_slots(spec: AttentionSpec) -> int:
+    """Rolling-window size the hybrid decode state carries (0 = none)."""
+    if spec.family != "hybrid":
+        return 0
+    return effective_window(spec.window, spec.resolved().chunk_size)
+
+
 def _check_state(state: AttnState, spec: AttentionSpec) -> None:
+    if spec.family == "hybrid":
+        if state.moments is None or (_window_slots(spec) > 0
+                                     and state.kv is None):
+            raise ValueError(
+                f"AttnState lacks the moments/window legs required by "
+                f"{spec} — the state was initialized for a different "
+                f"attention family or window")
+        return
     leg = "kv" if spec.family == "softmax" else "moments"
     if getattr(state, leg) is None:
         raise ValueError(
@@ -151,6 +175,19 @@ def init_state(spec: AttentionSpec, *, batch: int, n_kv_heads: int,
         return AttnState(kv=kv, moments=None)
     mom = init_fastmax_state(batch, n_kv_heads, q_head_dim, v_head_dim,
                              p=spec.p, dtype=jnp.float32)
+    w = _window_slots(spec)
+    if w > 0:
+        # hybrid near-field window: the last <=W tokens, right-aligned
+        # (row W-1 most recent); `length` counts TOTAL tokens folded so
+        # far (moments semantics), not a write cursor — the shift-append
+        # is position-independent. mask starts all-zero (window empty).
+        kv = KVCache(
+            k=jnp.zeros((batch, n_kv_heads, w, q_head_dim), dtype),
+            v=jnp.zeros((batch, n_kv_heads, w, v_head_dim), dtype),
+            length=jnp.zeros((), jnp.int32),
+            mask=jnp.zeros((batch, n_kv_heads, w), jnp.float32),
+        )
+        return AttnState(kv=kv, moments=mom)
     return AttnState(kv=None, moments=mom)
 
 
@@ -217,6 +254,46 @@ def prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     spec_r = spec.resolved()
     qh = normalize_qk(q) if spec.normalize else q
     kh = normalize_qk(k) if spec.normalize else k
+    w_slots = _window_slots(spec)
+    if w_slots > 0:
+        # hybrid: one jnp scan yields outputs AND the final moments; the
+        # near-field window is recompacted to the last <=W valid tokens
+        # (normalized keys — band scores are q̂·k̂). With `offset` the
+        # carried window seeds the scan's previous-chunk buffer and the
+        # carried moments seed the far field. W=0 hybrid falls through to
+        # the fastmax moment paths below (bitwise identical).
+        fs = feature_shard_flag(hkv)
+        kv = state.kv
+        if offset is not None:
+            _log_once("prefill: hybrid resumable (offset) chunk via the "
+                      "jnp hybrid scan")
+            init, init_win = state.moments, (kv.k, kv.v, kv.mask)
+        else:
+            init, init_win = None, None
+        o, final = _hybrid_scan(
+            qh, kh, v, p=spec.p, window=spec_r.window,
+            chunk_size=spec_r.chunk_size, kv_mask=kv_mask,
+            denom_eps=spec.denom_eps, feature_shard=fs,
+            init=init, init_win=init_win)
+        m = (jnp.ones((b, hkv, n), jnp.float32) if kv_mask is None
+             else kv_mask.astype(jnp.float32))
+        nk, nv, nm = roll_window(
+            kv.k if offset is not None else None,
+            kv.v if offset is not None else None,
+            kv.mask if offset is not None else None,
+            kh, v, m, w_slots)
+        off = jnp.asarray(0 if offset is None else offset, jnp.int32)
+        if kv.length.ndim == 0:
+            new_len = off + jnp.asarray(n, jnp.int32)
+        else:
+            nvalid = (jnp.full((b,), n, jnp.int32) if kv_mask is None else
+                      jnp.sum(kv_mask[:, 0, :] > 0,
+                              axis=-1).astype(jnp.int32))
+            new_len = off + jnp.broadcast_to(nvalid, kv.length.shape)
+        nkv = KVCache(nk.astype(kv.k.dtype), nv.astype(kv.v.dtype),
+                      new_len, nm)
+        return o.astype(q.dtype), AttnState(kv=nkv,
+                                            moments=Moments(*final))
     if offset is not None:
         # resumable chunked prefill: seed the jnp scan with the carried
         # moments (the Pallas prefill kernels take no initial carry; decode
@@ -357,6 +434,36 @@ def step(state: AttnState, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     # fold the query group into the token axis (no broadcast of the state)
     qg = qh.reshape(q.shape[0], hkv, hq // hkv, q.shape[-1])
     num, den = combine_with_queries(qg, new_mom, p=spec.p, feature_shard=fs)
+    new_kv = None
+    w_slots = _window_slots(spec)
+    if w_slots > 0:
+        # hybrid near field: the moments above already weighted every
+        # causal token by f_p; add the (exp - f_p) correction for the
+        # in-band ones — the token itself (distance 0) and window rows
+        # 1..W-1 (row r holds the token at distance W-r, so row 0 sits
+        # at distance W, just out of band)
+        kv = state.kv
+        acc = jnp.promote_types(qg.dtype, jnp.float32)
+        qf = qg.astype(acc)
+        s0 = jnp.einsum("bhgd,bhtd->bhg", qf, kh.astype(acc))
+        c0 = jnp.exp(s0) - poly_kernel(s0, spec.p)
+        num = num + c0[..., None] * v[:, :, 0].astype(num.dtype)[:, :, None]
+        den = den + c0
+        sw = jnp.einsum("bhgd,bhwd->bhgw", qf, kv.k.astype(acc))
+        cw = jnp.exp(sw) - poly_kernel(sw, spec.p)
+        in_band = (jnp.arange(w_slots) >= 1).astype(acc)
+        cw = cw * (in_band[None, None, None, :] * kv.mask[:, :, None, :])
+        num = num + jnp.einsum("bhgw,bhwj->bhgj", cw,
+                               kv.v.astype(acc)).astype(num.dtype)
+        den = den + jnp.sum(cw, axis=-1)
+        # shift-append the new token at row W-1 (most recent)
+        nk = jnp.concatenate([kv.k[:, :, 1:], kh.astype(kv.k.dtype)],
+                             axis=2)
+        nv = jnp.concatenate([kv.v[:, :, 1:], v.astype(kv.v.dtype)],
+                             axis=2)
+        nm = jnp.concatenate([kv.mask[:, :, 1:],
+                              jnp.ones_like(kv.mask[:, :, :1])], axis=2)
+        new_kv = KVCache(nk, nv, kv.length + 1, nm)
     o = num / (den + spec.denom_eps)[..., None]
     o = o.reshape(q.shape[0], hq, 1, -1).astype(q.dtype)
-    return o, AttnState(kv=None, moments=new_mom)
+    return o, AttnState(kv=new_kv, moments=new_mom)

@@ -1,0 +1,485 @@
+"""Hybrid near/far-field attention (FMMformer-style, arXiv 2108.02347).
+
+The source paper derives fastmax from the fast multipole method's
+near/far-field factorization but ships only the far field. This module
+fuses the two: an *exact* softmax over a width-`window` causal band (the
+near field, where the polynomial truncation error concentrates) with the
+fastmax p-th order moments over every off-band token (the far field),
+combined in ONE normalizer so the result is a single well-defined
+attention distribution.
+
+Correction form: with normalized scores s_ij = q̂_i·k̂_j and the paper's
+polynomial f_p(x) = sum_{l<=p} x^l / l!, the unnormalized weight is
+
+    w_ij = f_p(s_ij)                           for all causal j  (moments)
+         + [exp(s_ij) - f_p(s_ij)]             for j in the band (exact fix)
+
+    o_i  = sum_j w_ij v_j / (sum_j w_ij + denom_eps)
+
+The band is `i - j < w` including the diagonal (a token always sees
+itself exactly). The moment leg is UNCHANGED from fastmax — the band
+contributes only the (exp - f_p) correction, so there is no
+double-counting and w=0 degenerates bitwise to fastmax, while w >= N is
+exact softmax over the normalized scores.
+
+Effective window: the band is clamped to one chunk,
+``w_eff = min(window, chunk_size)`` — the chunked scan (and the Pallas
+kernel) only ever looks one chunk back, so widening the band past the
+chunk length requires raising chunk_size. Both the scan and the decode
+state (repro.attention.state) apply the same clamp, keeping chunked
+prefill and step-by-step decode in lockstep.
+
+kv_mask removes masked keys from both legs exactly. Band *distances*
+stay positional within one call and are valid-rank-based across resumed
+prefill calls (the rolling window keeps the last `w` VALID tokens) — the
+two agree for trailing padding (the only masking the serve engine
+produces); interior masks would distort band distances across call
+boundaries (documented limitation, see docs/hybrid.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fastmax import (
+    Moments,
+    _acc_dtype,
+    _causal_scan,
+    _causal_scan_cg_bwd,
+    _combine_grouped,
+    _constrain_moments_j,
+    _f32,
+    _group_queries,
+    _intra_chunk,
+    _ungroup,
+    compute_moments,
+    fastmax_causal_chunked,
+)
+from repro.core.ref import normalize_qk, poly_kernel
+
+__all__ = [
+    "effective_window",
+    "hybrid_attention_ref",
+    "hybrid_causal_chunked",
+    "hybrid_bwd_scan",
+    "roll_window",
+]
+
+
+def effective_window(window: int, chunk_size: int) -> int:
+    """The band width the scan/kernel/decode paths actually realize."""
+    return max(0, min(int(window), int(chunk_size)))
+
+
+def _band_corr(qc, kc, vc, wc, band, *, p):
+    """(exp - f_p) correction over a masked score block.
+
+    qc: [B,Hkv,G,n,D], kc: [B,Hkv,m,D], vc: [B,Hkv,m,Dv], wc: [B,Hkv,m]
+    validity (or None), band: [n,m] static mask. Returns
+    (num [B,Hkv,G,n,Dv], den [B,Hkv,G,n]).
+    """
+    acc = _acc_dtype(qc)
+    s = jnp.einsum("...gnd,...md->...gnm", _f32(qc), _f32(kc),
+                   preferred_element_type=acc)
+    corr = (jnp.exp(s) - poly_kernel(s, p)) * band.astype(acc)
+    if wc is not None:
+        corr = corr * wc[..., None, None, :].astype(acc)
+    num = jnp.einsum("...gnm,...mj->...gnj", corr, _f32(vc),
+                     preferred_element_type=acc)
+    den = jnp.sum(corr, axis=-1)
+    return num, den
+
+
+def _band_masks(cs: int, w_eff: int, dtype=jnp.float32):
+    """Static (intra, prev) band masks for chunk length `cs`.
+
+    intra[i, m] — key m of the SAME chunk is in-band:   0 <= i-m < w_eff
+    prev [i, m] — key m of the PREVIOUS chunk is:       i+cs-m  < w_eff
+    (prev keys are always causally earlier, so no tril needed there).
+    """
+    i = jnp.arange(cs)[:, None]
+    m = jnp.arange(cs)[None, :]
+    intra = ((i >= m) & (i - m < w_eff)).astype(dtype)
+    prev = ((i + cs - m) < w_eff).astype(dtype)
+    return intra, prev
+
+
+# ---------------------------------------------------------------------------
+# Composed O(N^2) oracle (tests; f64-compared against scan and kernel)
+# ---------------------------------------------------------------------------
+
+
+def hybrid_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    p: int = 2,
+    window: int = 64,
+    kv_mask: Optional[jnp.ndarray] = None,
+    denom_eps: float = 1e-6,
+    normalize: bool = True,
+) -> jnp.ndarray:
+    """Dense reference: banded exact softmax + masked fastmax, one
+    normalizer. q:[B,Hq,N,D] k,v:[B,Hkv,N,*]. Causal only."""
+    hkv = k.shape[1]
+    n = q.shape[2]
+    out_dtype = q.dtype
+    qh, kh = _f32(q), _f32(k)
+    if normalize:
+        qh, kh = normalize_qk(qh), normalize_qk(kh)
+    acc = qh.dtype
+    qg = _group_queries(qh, hkv)
+    s = jnp.einsum("...gnd,...md->...gnm", qg, kh,
+                   preferred_element_type=acc)
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    tri = (i >= j).astype(acc)
+    band = ((i >= j) & (i - j < window)).astype(acc)
+    w = poly_kernel(s, p) * tri + (jnp.exp(s) - poly_kernel(s, p)) * band
+    if kv_mask is not None:
+        w = w * kv_mask[..., None, None, :].astype(acc)
+    num = jnp.einsum("...gnm,...mj->...gnj", w, _f32(v),
+                     preferred_element_type=acc)
+    den = jnp.sum(w, axis=-1)
+    o = num / (den + denom_eps)[..., None]
+    return _ungroup(o).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked causal scan (jnp oracle for the Pallas kernel + chunked backend)
+# ---------------------------------------------------------------------------
+
+
+def _hybrid_scan(q, k, v, *, p, window, chunk_size, kv_mask, denom_eps,
+                 feature_shard=False, init: Optional[Moments] = None,
+                 init_win=None):
+    """Chunked causal hybrid. Returns (o, final_moments).
+
+    Mirrors `fastmax._causal_scan` with an extended carry: besides the
+    moments of all previous chunks, the previous chunk's (k, v, validity)
+    ride along so the band correction can reach up to one chunk back
+    (hence w_eff = min(window, cs)).
+
+    `init` / `init_win` resume the scan (serving engine chunked prefill):
+    `init` seeds the moment carry; `init_win` = (wk, wv, wm) is the
+    rolling window of the last <=W tokens already folded, RIGHT-aligned
+    (row W-1 = most recent). It is embedded into the last rows of a
+    zeroed previous-chunk buffer — right alignment makes the prev-chunk
+    distance formula (i + cs - m) land each carried token at exactly its
+    token distance from this call's queries.
+
+    Inputs q, k are expected already normalized (same convention as
+    `_causal_scan`).
+    """
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    dv = v.shape[-1]
+    cs = min(chunk_size, n)
+    if init_win is not None:
+        # the carried window must fit inside one prev-chunk buffer
+        cs = min(chunk_size, max(n, init_win[0].shape[2]))
+    w_eff = effective_window(window, cs)
+    if w_eff == 0:
+        return _causal_scan(q, k, v, p=p, chunk_size=chunk_size,
+                            kv_mask=kv_mask, denom_eps=denom_eps,
+                            feature_shard=feature_shard, init=init)
+    nc = -(-n // cs)
+    pad = nc * cs - n
+
+    if feature_shard:
+        from repro.sharding.rules import shard_stacked
+        q = shard_stacked(q, batch_dim=0)
+        k = shard_stacked(k, batch_dim=0)
+        v = shard_stacked(v, batch_dim=0, model_dim=-1)
+    if kv_mask is None:
+        w = jnp.ones((b, hkv, n), dtype=jnp.float32)
+    else:
+        w = kv_mask.astype(jnp.float32)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, pad)))
+
+    qg = _group_queries(qp, hkv)
+    g = qg.shape[2]
+    qs = jnp.moveaxis(qg.reshape(b, hkv, g, nc, cs, d), 3, 0)
+    ks = jnp.moveaxis(kp.reshape(b, hkv, nc, cs, d), 2, 0)
+    vs = jnp.moveaxis(vp.reshape(b, hkv, nc, cs, dv), 2, 0)
+    ws = jnp.moveaxis(wp.reshape(b, hkv, nc, cs), 2, 0)
+    if feature_shard:
+        from repro.sharding.rules import shard_stacked
+        qs = shard_stacked(qs, seq_dim=0)
+        ks = shard_stacked(ks, seq_dim=0)
+        vs = shard_stacked(vs, model_dim=-1, seq_dim=0)
+        ws = shard_stacked(ws, seq_dim=0)
+
+    intra_band, prev_band = _band_masks(cs, w_eff)
+
+    zero = jax.tree.map(
+        jnp.zeros_like, compute_moments(ks[0], vs[0], p=p, kv_mask=ws[0])
+    )
+    if init is not None:
+        zero = Moments(*(i_.astype(z.dtype) for z, i_ in zip(zero, init)))
+    if feature_shard:
+        zero = _constrain_moments_j(zero)
+    pk0 = jnp.zeros((b, hkv, cs, d), kp.dtype)
+    pv0 = jnp.zeros((b, hkv, cs, dv), vp.dtype)
+    pw0 = jnp.zeros((b, hkv, cs), jnp.float32)
+    if init_win is not None:
+        wk_, wv_, wm_ = init_win
+        wlen = wk_.shape[2]
+        pk0 = pk0.at[:, :, cs - wlen:].set(wk_.astype(pk0.dtype))
+        pv0 = pv0.at[:, :, cs - wlen:].set(wv_.astype(pv0.dtype))
+        pw0 = pw0.at[:, :, cs - wlen:].set(wm_.astype(pw0.dtype))
+
+    def body(carry, xs):
+        mom, pk, pv, pw = carry
+        qc, kc, vc, wc = xs
+        num_i, den_i = _combine_grouped(qc, mom, p=p,
+                                        feature_shard=feature_shard)
+        num_a, den_a = _intra_chunk(qc, kc, vc, p=p, wc=wc)
+        num_b, den_b = _band_corr(qc, kc, vc, wc, intra_band, p=p)
+        num_p, den_p = _band_corr(qc, pk, pv, pw, prev_band, p=p)
+        num = num_i + num_a + num_b + num_p
+        den = den_i + den_a + den_b + den_p
+        o = num / (den + denom_eps)[..., None]
+        if feature_shard:
+            from repro.sharding.rules import shard_stacked
+            o = shard_stacked(o, batch_dim=0, model_dim=-1)
+        new_mom = mom + compute_moments(kc, vc, p=p, kv_mask=wc)
+        if feature_shard:
+            from repro.sharding.rules import shard_stacked
+            new_mom = _constrain_moments_j(new_mom)
+            kc = shard_stacked(kc, batch_dim=0)
+            vc = shard_stacked(vc, batch_dim=0, model_dim=-1)
+            wc = shard_stacked(wc, batch_dim=0)
+        return (new_mom, kc, vc, wc), o
+
+    (final, _, _, _), os_ = jax.lax.scan(
+        body, (zero, pk0, pv0, pw0), (qs, ks, vs, ws))
+    o = jnp.moveaxis(os_, 0, 3).reshape(b, hkv, g, nc * cs, dv)
+    o = _ungroup(o)[:, :, :n]
+    return o, final
+
+
+def hybrid_bwd_scan(q, k, v, final: Moments, do, *, p, window, chunk_size,
+                    denom_eps, feature_shard=False):
+    """§2.5 reverse scan extended with band residuals. Returns (gq,gk,gv).
+
+    Exactly the fastmax recomputation trick — the moment carry is
+    reconstructed reversibly (carry_before = carry_after - delta) and the
+    chunk forward re-autodiffed — plus the band extension: each chunk's
+    forward also reads the PREVIOUS chunk's (k, v), so those ride along
+    as shifted scan inputs and their cotangents are shift-added back
+    after the scan (gk[c] += gk_prev[c+1]).
+
+    Shared by the chunked custom_vjp and the Pallas kernel's backward
+    (`final` then comes from the kernel's emitted carry).
+    """
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    dv = v.shape[-1]
+    cs = min(chunk_size, n)
+    w_eff = effective_window(window, cs)
+    if w_eff == 0:
+        return _causal_scan_cg_bwd(p, chunk_size, denom_eps, feature_shard,
+                                   (q, k, v, final), do)
+    nc = -(-n // cs)
+    pad = nc * cs - n
+
+    if feature_shard:
+        from repro.sharding.rules import shard_stacked
+        q = shard_stacked(q, batch_dim=0)
+        k = shard_stacked(k, batch_dim=0)
+        v = shard_stacked(v, batch_dim=0, model_dim=-1)
+        do = shard_stacked(do, batch_dim=0, model_dim=-1)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    dop = jnp.pad(do, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    w = jnp.pad(jnp.ones((b, hkv, n), dtype=jnp.float32),
+                ((0, 0), (0, 0), (0, pad)))
+
+    qg = _group_queries(qp, hkv)
+    g = qg.shape[2]
+    qs = jnp.moveaxis(qg.reshape(b, hkv, g, nc, cs, d), 3, 0)
+    ks = jnp.moveaxis(kp.reshape(b, hkv, nc, cs, d), 2, 0)
+    vs = jnp.moveaxis(vp.reshape(b, hkv, nc, cs, dv), 2, 0)
+    ws = jnp.moveaxis(w.reshape(b, hkv, nc, cs), 2, 0)
+    dog = _group_queries(dop, hkv)
+    dos = jnp.moveaxis(dog.reshape(b, hkv, g, nc, cs, dv), 3, 0)
+    dos = dos.astype(_acc_dtype(dos))
+    # the previous chunk's k/v/validity as shifted scan inputs
+    kps = jnp.concatenate([jnp.zeros_like(ks[:1]), ks[:-1]], axis=0)
+    vps = jnp.concatenate([jnp.zeros_like(vs[:1]), vs[:-1]], axis=0)
+    wps = jnp.concatenate([jnp.zeros_like(ws[:1]), ws[:-1]], axis=0)
+    if feature_shard:
+        from repro.sharding.rules import shard_stacked
+        qs = shard_stacked(qs)
+        ks = shard_stacked(ks)
+        vs = shard_stacked(vs, model_dim=-1)
+        ws = shard_stacked(ws)
+        dos = shard_stacked(dos, model_dim=-1)
+        kps = shard_stacked(kps)
+        vps = shard_stacked(vps, model_dim=-1)
+        wps = shard_stacked(wps)
+
+    intra_band, prev_band = _band_masks(cs, w_eff)
+
+    def chunk_fwd(mom, qc, kc, vc, wc, kp_, vp_, wp_):
+        num_i, den_i = _combine_grouped(qc, mom, p=p,
+                                        feature_shard=feature_shard)
+        num_a, den_a = _intra_chunk(qc, kc, vc, p=p, wc=wc)
+        num_b, den_b = _band_corr(qc, kc, vc, wc, intra_band, p=p)
+        num_p, den_p = _band_corr(qc, kp_, vp_, wp_, prev_band, p=p)
+        num = num_i + num_a + num_b + num_p
+        den = den_i + den_a + den_b + den_p
+        return num / (den + denom_eps)[..., None]
+
+    def rev_body(state, xs):
+        mom_after, gmom = state
+        qc, kc, vc, wc, kp_, vp_, wp_, doc = xs
+        delta = compute_moments(kc, vc, p=p, kv_mask=wc)
+        mom_before = mom_after - delta
+        if feature_shard:
+            mom_before = _constrain_moments_j(mom_before)
+
+        def f(mom, qc_, kc_, vc_, kpp, vpp):
+            o = chunk_fwd(mom, qc_, kc_, vc_, wc, kpp, vpp, wp_)
+            new = mom + compute_moments(kc_, vc_, p=p, kv_mask=wc)
+            if feature_shard:
+                new = _constrain_moments_j(new)
+            return o, new
+
+        _, vjp_fn = jax.vjp(f, mom_before, qc, kc, vc, kp_, vp_)
+        gmom_b, gq, gk, gv, gkp, gvp = vjp_fn((doc, gmom))
+        gmom_b = Moments(*gmom_b)
+        if feature_shard:
+            from repro.sharding.rules import shard_stacked
+            gmom_b = _constrain_moments_j(gmom_b)
+            gq = shard_stacked(gq, batch_dim=0)
+            gk = shard_stacked(gk, batch_dim=0)
+            gv = shard_stacked(gv, batch_dim=0, model_dim=-1)
+            gkp = shard_stacked(gkp, batch_dim=0)
+            gvp = shard_stacked(gvp, batch_dim=0, model_dim=-1)
+        return (mom_before, gmom_b), (gq, gk, gv, gkp, gvp)
+
+    gzero = jax.tree.map(jnp.zeros_like, final)
+    if feature_shard:
+        gzero = _constrain_moments_j(gzero)
+        final = _constrain_moments_j(final)
+    _, (gqs, gks, gvs, gkps, gvps) = jax.lax.scan(
+        rev_body, (final, gzero), (qs, ks, vs, ws, kps, vps, wps, dos),
+        reverse=True)
+    # chunk c's prev-key cotangent belongs to chunk c-1's keys
+    gks = gks + jnp.concatenate(
+        [gkps[1:], jnp.zeros_like(gkps[:1])], axis=0)
+    gvs = gvs + jnp.concatenate(
+        [gvps[1:], jnp.zeros_like(gvps[:1])], axis=0)
+    gq = _ungroup(jnp.moveaxis(gqs, 0, 3).reshape(b, hkv, g, nc * cs, d))
+    gk = jnp.moveaxis(gks, 0, 2).reshape(b, hkv, nc * cs, d)
+    gv = jnp.moveaxis(gvs, 0, 2).reshape(b, hkv, nc * cs, dv)
+    return (
+        gq[:, :, :n].astype(q.dtype),
+        gk[:, :, :n].astype(k.dtype),
+        gv[:, :, :n].astype(v.dtype),
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _hybrid_scan_cg(q, k, v, p, window, chunk_size, denom_eps,
+                    feature_shard=False):
+    """Hybrid causal scan with the §2.5 memory-reduced custom gradient."""
+    o, _ = _hybrid_scan(q, k, v, p=p, window=window, chunk_size=chunk_size,
+                        kv_mask=None, denom_eps=denom_eps,
+                        feature_shard=feature_shard)
+    return o
+
+
+def _hybrid_scan_cg_fwd(q, k, v, p, window, chunk_size, denom_eps,
+                        feature_shard=False):
+    o, final = _hybrid_scan(q, k, v, p=p, window=window,
+                            chunk_size=chunk_size, kv_mask=None,
+                            denom_eps=denom_eps, feature_shard=feature_shard)
+    return o, (q, k, v, final)
+
+
+def _hybrid_scan_cg_bwd(p, window, chunk_size, denom_eps, feature_shard,
+                        res, do):
+    q, k, v, final = res
+    return hybrid_bwd_scan(q, k, v, final, do, p=p, window=window,
+                           chunk_size=chunk_size, denom_eps=denom_eps,
+                           feature_shard=feature_shard)
+
+
+_hybrid_scan_cg.defvjp(_hybrid_scan_cg_fwd, _hybrid_scan_cg_bwd)
+
+
+def hybrid_causal_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    p: int = 2,
+    window: int = 64,
+    chunk_size: int = 128,
+    kv_mask: Optional[jnp.ndarray] = None,
+    denom_eps: float = 1e-6,
+    custom_grad: bool = True,
+    feature_shard: bool = False,
+) -> jnp.ndarray:
+    """Public chunked entry. q, k already normalized (same convention as
+    `fastmax_causal_chunked`); w_eff=0 delegates bitwise to fastmax."""
+    out_dtype = q.dtype
+    cs = min(chunk_size, q.shape[2])
+    if effective_window(window, cs) == 0:
+        return fastmax_causal_chunked(
+            q, k, v, p=p, chunk_size=chunk_size, kv_mask=kv_mask,
+            denom_eps=denom_eps, custom_grad=custom_grad,
+            feature_shard=feature_shard)
+    if custom_grad and kv_mask is None:
+        o = _hybrid_scan_cg(q, k, v, p, window, chunk_size, denom_eps,
+                            feature_shard)
+    else:
+        o, _ = _hybrid_scan(q, k, v, p=p, window=window,
+                            chunk_size=chunk_size, kv_mask=kv_mask,
+                            denom_eps=denom_eps, feature_shard=feature_shard)
+    return o.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rolling-window state helper (decode protocol)
+# ---------------------------------------------------------------------------
+
+
+def roll_window(wk, wv, wm, k, v, m, W: int):
+    """Right-aligned "last W valid tokens" compaction.
+
+    Concatenates the carried window (wk/wv/wm, may be None for a fresh
+    state) with this call's (k, v, validity m) along the token axis and
+    keeps the last W VALID entries, right-aligned: output row W-1 is the
+    most recent valid token, unfilled rows have mask 0. Implemented as a
+    rank-from-the-end one-hot contraction — ranks are unique so each
+    output row receives at most one token, and it stays O(T·W·D) with no
+    dynamic scatter (T = carried + chunk tokens).
+    """
+    if wk is None:
+        ck, cv, cm = k, v, m
+    else:
+        ck = jnp.concatenate([wk.astype(k.dtype), k], axis=2)
+        cv = jnp.concatenate([wv.astype(v.dtype), v], axis=2)
+        cm = jnp.concatenate([wm.astype(m.dtype), m], axis=2)
+    # rank r over valid entries counted from the end (r=1 most recent);
+    # invalid entries get r=0 and are routed to the dropped dummy row W
+    r = jnp.cumsum(cm[..., ::-1], axis=-1)[..., ::-1] * cm
+    r = r.astype(jnp.int32)
+    dest = jnp.where((r >= 1) & (r <= W), W - r, W)
+    oh = dest[..., None] == jnp.arange(W, dtype=jnp.int32)
+    nk = jnp.einsum("bhtw,bhtd->bhwd", oh.astype(ck.dtype), ck)
+    nv = jnp.einsum("bhtw,bhtd->bhwd", oh.astype(cv.dtype), cv)
+    nm = jnp.sum(oh.astype(jnp.float32), axis=2)
+    return nk, nv, nm

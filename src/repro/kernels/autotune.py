@@ -1,4 +1,4 @@
-"""Schedule autotuner for the fastmax Pallas kernels.
+"""Schedule autotuner for the fastmax/hybrid Pallas kernels.
 
 Every schedule knob in the kernel stack used to be a static guess:
 `tiling.pick_bm`/`pick_blk` are fixed VMEM-budget heuristics and
@@ -78,7 +78,7 @@ __all__ = ["Schedule", "ShapeKey", "KERNELS", "autotune_mode",
            "gate_keys", "build_gate_entries", "DEFAULT_CACHE",
            "CACHE_VERSION"]
 
-KERNELS = ("causal_fwd", "causal_bwd", "decode", "noncausal")
+KERNELS = ("causal_fwd", "causal_bwd", "decode", "noncausal", "hybrid_fwd")
 GRIDS = ("parallel", "arbitrary")
 
 CACHE_VERSION = 1
@@ -154,7 +154,7 @@ def hardware_label() -> str:
 def default_schedule(kernel: str, d: int, dv: int,
                      chunk_size: int) -> Schedule:
     """The untuned schedule — exactly what the kernels pick on their own."""
-    if kernel == "causal_fwd":
+    if kernel in ("causal_fwd", "hybrid_fwd"):
         blk = pick_blk(d, dv, FWD_BLK_BUDGET)
     elif kernel == "causal_bwd":
         blk = pick_blk(d, dv, BWD_BLK_BUDGET)
@@ -177,7 +177,7 @@ def candidate_schedules(kernel: str, key: ShapeKey,
     # bm: largest 3 divisors of D whose [bm*D, blk] tile stays MXU-sized
     bms = [bm for bm in divisors(d) if bm * d <= 4 * KERNEL_BM_BUDGET][-3:]
 
-    if kernel in ("causal_fwd", "causal_bwd"):
+    if kernel in ("causal_fwd", "causal_bwd", "hybrid_fwd"):
         ntuples = 2 if kernel == "causal_bwd" else 1
         cap = VMEM_BYTES // 2    # leave headroom for the I/O tiles
         blks = [b for b in divisors(dv)
@@ -226,7 +226,7 @@ def cost_model(key: ShapeKey, sched: Schedule) -> float:
     d2 = d * d if p >= 2 else 1
     mega = MEGACORE if grid == "parallel" else 1
 
-    if key.kernel in ("causal_fwd", "causal_bwd"):
+    if key.kernel in ("causal_fwd", "causal_bwd", "hybrid_fwd"):
         cs = min(c, max(8, n))
         nc = -(-n // cs)
         nb = dv // blk
@@ -245,11 +245,20 @@ def cost_model(key: ShapeKey, sched: Schedule) -> float:
                       + 2.0 * cs * d2 * blk       # m2 update
                       + 2.0 * g * cs * d * d      # g2 denominator
                       + 2.0 * cs * d * d)         # g2 update
+        if key.kernel == "hybrid_fwd":
+            # band corrections: the previous-chunk score matmul and the
+            # banded correction @ v (masking is elementwise; the block
+            # shapes — and so the flops — don't depend on the window)
+            flops += (2.0 * g * cs * cs * d       # prev-chunk QK^T
+                      + 2.0 * g * cs * cs * blk)  # band corr @ V
+            bytes_extra = (cs * d + cs * blk + cs) * inb  # prev k/v/mask
+        else:
+            bytes_extra = 0.0
         if key.kernel == "causal_bwd":
             # reversible reconstruct + recompute + 3 gradient matmuls +
             # carry-cotangent fold: ~2.5x the forward's per-chunk work
             flops *= 2.5
-        bytes_ = io_tile
+        bytes_ = io_tile + bytes_extra
         programs = nb * nc
         return (programs * _roof(flops, bytes_)
                 + programs * GRID_STEP_S) / mega
@@ -310,6 +319,12 @@ def measure(key: ShapeKey, sched: Schedule, *, iters: int = 5,
     if key.kernel == "causal_fwd":
         fn = lambda: fastmax_causal_pallas(         # noqa: E731
             q, k, v, p=p, chunk_size=sched.chunk_size, interpret=interpret,
+            bm=sched.bm, blk=sched.blk, grid=sched.grid)
+    elif key.kernel == "hybrid_fwd":
+        from repro.kernels.hybrid_causal import hybrid_causal_pallas
+        fn = lambda: hybrid_causal_pallas(          # noqa: E731
+            q, k, v, p=p, window=min(64, max(n, 1)),
+            chunk_size=sched.chunk_size, interpret=interpret,
             bm=sched.bm, blk=sched.blk, grid=sched.grid)
     elif key.kernel == "causal_bwd":
         _, state = fastmax_causal_pallas(
@@ -538,6 +553,8 @@ def gate_keys(platform: str = "cpu") -> list:
                 (ShapeKey("decode", 1, d, dv, g, 2, "float32",
                           platform), 128),
                 (ShapeKey("noncausal", n, d, dv, g, 2, "float32",
+                          platform), 128),
+                (ShapeKey("hybrid_fwd", n, d, dv, g, 2, "float32",
                           platform), 128)]
     # dryrun-gate kernel cells: qwen2.5-32b at TP=16 routes feature mode
     # (hkv=8 does not divide 16; Dv does), so the per-device launches see
@@ -553,7 +570,12 @@ def gate_keys(platform: str = "cpu") -> list:
              128),
             (ShapeKey("causal_bwd", n_train, d, dvl, g, 2, dt, platform),
              128),
-            (ShapeKey("decode", 1, d, dvl, g, 2, dt, platform), 128)]
+            (ShapeKey("decode", 1, d, dvl, g, 2, dt, platform), 128),
+            # hybrid train_4k cell: the feature-mode forward launches see
+            # the same local Dv shard; the backward is the jnp band scan
+            # (no kernel), so only hybrid_fwd needs an entry
+            (ShapeKey("hybrid_fwd", n_train, d, dvl, g, 2, dt, platform),
+             128)]
     return out
 
 

@@ -23,14 +23,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fastmax as _fm
+from repro.core import hybrid as _hy
 from repro.kernels import autotune as _at
 from repro.kernels.fastmax_causal import fastmax_causal_pallas
 from repro.kernels.fastmax_causal_bwd import fastmax_causal_bwd_pallas
 from repro.kernels.fastmax_decode import fastmax_decode_pallas
 from repro.kernels.fastmax_noncausal import fastmax_noncausal_pallas
+from repro.kernels.hybrid_causal import hybrid_causal_pallas
 
 __all__ = ["fastmax", "fastmax_prefill_kernel", "fastmax_decode",
-           "fastmax_bwd", "use_interpret", "use_pallas_bwd"]
+           "fastmax_bwd", "hybrid", "use_interpret", "use_pallas_bwd"]
 
 
 def use_interpret() -> bool:
@@ -177,9 +179,113 @@ def fastmax(
             q, k, v, p, chunk_size, denom_eps, interpret, sf, sb)
     if schedule is None:
         schedule = _lookup("noncausal", q, k, v, p, chunk_size)
+    return _fastmax_noncausal_trainable(
+        q, k, v, p, chunk_size, denom_eps, interpret, schedule)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _fastmax_noncausal_trainable(q, k, v, p, chunk_size, denom_eps,
+                                 interpret, sched):
     return fastmax_noncausal_pallas(
         q, k, v, p=p, denom_eps=denom_eps, interpret=interpret,
-        **_nc_kwargs(schedule, chunk_size))
+        **_nc_kwargs(sched, chunk_size))
+
+
+def _fnc_fwd(q, k, v, p, chunk_size, denom_eps, interpret, sched):
+    o = fastmax_noncausal_pallas(
+        q, k, v, p=p, denom_eps=denom_eps, interpret=interpret,
+        **_nc_kwargs(sched, chunk_size))
+    return o, (q, k, v)
+
+
+def _fnc_bwd(p, chunk_size, denom_eps, interpret, sched, res, do):
+    # the two-phase noncausal kernel has no fused backward: grads come from
+    # autodiff of the jnp moment path — ONE global moment sum, so residuals
+    # are O(N D^p) scan chunks, never O(N^2) scores. Mathematically the
+    # same function as the kernel forward (encoder attention stays
+    # kernel-routed under training instead of rerouting the forward too).
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _fm.fastmax_noncausal(
+            q_, k_, v_, p=p, denom_eps=denom_eps,
+            chunk_size=max(chunk_size, 512)),
+        q, k, v)
+    return vjp(do)
+
+
+_fastmax_noncausal_trainable.defvjp(_fnc_fwd, _fnc_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _hybrid_causal_trainable(q, k, v, p, window, chunk_size, denom_eps,
+                             interpret, sched_fwd):
+    return hybrid_causal_pallas(
+        q, k, v, p=p, window=window, denom_eps=denom_eps,
+        interpret=interpret, **_causal_kwargs(sched_fwd, chunk_size))
+
+
+def _hc_fwd(q, k, v, p, window, chunk_size, denom_eps, interpret, sched_fwd):
+    # like fastmax: the forward kernel emits the final moment carry as the
+    # only residual beyond (q, k, v) — the band needs no carry, its
+    # residuals (the previous chunk's k/v) are rebuilt by shifting in the
+    # reverse scan
+    o, state = hybrid_causal_pallas(
+        q, k, v, p=p, window=window, denom_eps=denom_eps,
+        interpret=interpret, return_state=True,
+        **_causal_kwargs(sched_fwd, chunk_size))
+    if p < 2:
+        state = state[:2] + (None,) + state[3:]
+    return o, (q, k, v, state)
+
+
+def _hc_bwd(p, window, chunk_size, denom_eps, interpret, sched_fwd, res, do):
+    q, k, v, state = res
+    if state[2] is None or p < 2:
+        d, dv = q.shape[-1], v.shape[-1]
+        m2 = jnp.zeros(k.shape[:2] + (d, d, dv), state[0].dtype)
+        state = tuple(state[:2]) + (m2,) + tuple(state[3:])
+    # the backward must re-chunk exactly like the forward: w_eff depends on
+    # the chunk length, so a tuned forward schedule pins the reverse scan's
+    # chunk size too
+    cs = sched_fwd.chunk_size if sched_fwd is not None else chunk_size
+    return _hy.hybrid_bwd_scan(
+        q, k, v, _fm.Moments(*state), do, p=p, window=window,
+        chunk_size=cs, denom_eps=denom_eps)
+
+
+_hybrid_causal_trainable.defvjp(_hc_fwd, _hc_bwd)
+
+
+def hybrid(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    p: int = 2,
+    window: int = 64,
+    causal: bool = True,
+    chunk_size: int = 128,
+    denom_eps: float = 1e-6,
+    interpret: bool | None = None,
+    schedule=None,
+) -> jnp.ndarray:
+    """Kernel-backed hybrid near/far-field attention on pre-normalized
+    q̂/k̂ (causal only). Forward is the fused Pallas launch
+    (`hybrid_causal.py`); backward is the jnp §2.5 reverse scan extended
+    with band residuals, seeded by the kernel-emitted carry. w_eff=0
+    delegates to the fastmax pair for bitwise parity."""
+    if not causal:
+        raise ValueError("hybrid kernels are causal-only")
+    if interpret is None:
+        interpret = use_interpret()
+    if _hy.effective_window(window, chunk_size) == 0:
+        return fastmax(q, k, v, p=p, causal=True, chunk_size=chunk_size,
+                       denom_eps=denom_eps, interpret=interpret,
+                       schedule=schedule)
+    sf = schedule if schedule is not None else _lookup(
+        "hybrid_fwd", q, k, v, p, chunk_size)
+    return _hybrid_causal_trainable(
+        q, k, v, p, window, chunk_size, denom_eps, interpret, sf)
 
 
 def fastmax_prefill_kernel(

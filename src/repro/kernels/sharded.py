@@ -1,4 +1,4 @@
-"""shard_map wrappers: the fastmax Pallas kernels on a multi-device mesh.
+"""shard_map wrappers: the fastmax/hybrid Pallas kernels on a mesh.
 
 A `pallas_call` is opaque to the SPMD partitioner: under a mesh, GSPMD
 treats it as a replicated computation and all-gathers every operand. These
@@ -68,8 +68,8 @@ from jax.sharding import PartitionSpec as P
 
 __all__ = ["ShardPlan", "nontrivial_mesh", "plan_kernel_sharding",
            "fastmax_sharded", "fastmax_prefill_sharded",
-           "fastmax_decode_sharded", "pick_cp_exchange", "cp_carry_bytes",
-           "cp_boundary_model"]
+           "fastmax_decode_sharded", "hybrid_sharded", "pick_cp_exchange",
+           "cp_carry_bytes", "cp_boundary_model"]
 
 
 class ShardPlan(NamedTuple):
@@ -408,13 +408,39 @@ def fastmax_sharded(q, k, v, *, p: int, causal: bool, chunk_size: int,
             out_specs=P(ba, h, None, None),
             check_rep=False,
         )(q, k, v)
-    if not causal:
-        raise ValueError(
-            "feature/seq-mode trainable shard_map is causal-only; route "
-            "noncausal feature-TP attention to the chunked scan")
     if plan.mode == "seq":
+        if not causal:
+            raise ValueError(
+                "seq-mode (context-parallel) shard_map is causal-only")
         return _seq_trainable(q, k, v, p, chunk_size, denom_eps, plan,
                               schedule)
+    if not causal:
+        # feature mode, noncausal: shard_map wrap of the two-phase
+        # noncausal kernel. The global moments are Dv-decomposable and its
+        # denominator comes from the replicated k, so each device's launch
+        # on its (q, k, v-slice) yields the exact Dv slice of the output
+        # with zero collectives. Training works through plain autodiff of
+        # this wrap: the op pairs the kernel forward with the jnp moment
+        # backward (`ops._fastmax_noncausal_trainable`), each shard's
+        # dq/dk are exact partials over its Dv columns, and shard_map's
+        # transpose psums the replicated inputs' cotangents.
+        from repro.kernels import ops as kernel_ops
+
+        ba, f = plan.batch, plan.feat
+        rep4 = P(ba, None, None, None)
+
+        def nc_body(q, k, v):
+            return kernel_ops.fastmax(q, k, v, p=p, causal=False,
+                                      chunk_size=chunk_size,
+                                      denom_eps=denom_eps,
+                                      schedule=schedule)
+
+        return shard_map(
+            nc_body, mesh=plan.mesh,
+            in_specs=(rep4, rep4, P(ba, None, None, f)),
+            out_specs=P(ba, None, None, f),
+            check_rep=False,
+        )(q, k, v)
     return _feature_trainable(q, k, v, p, chunk_size, denom_eps, plan,
                               schedule)
 
@@ -516,6 +542,163 @@ def _ft_bwd(p, chunk_size, denom_eps, plan, schedule, res, do):
 
 
 _feature_trainable.defvjp(_ft_fwd, _ft_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid near/far-field (banded softmax + moments) — heads/feature modes
+# ---------------------------------------------------------------------------
+
+
+def _hybrid_sched(q, k, v, p, chunk_size, schedule):
+    """Shard-local schedule for a hybrid launch + the chunk size its jnp
+    backward must re-chunk with (w_eff depends on the chunk length, so
+    forward and backward are pinned to ONE chunk size — deterministic
+    lookup keeps the vjp-fwd and vjp-bwd bodies consistent)."""
+    from repro.kernels import ops as kernel_ops
+
+    sched = schedule if schedule is not None else kernel_ops._lookup(
+        "hybrid_fwd", q, k, v, p, chunk_size)
+    return sched, (sched.chunk_size if sched is not None else chunk_size)
+
+
+def _hybrid_feature_fwd_launch(q, k, v, p, window, chunk_size, denom_eps,
+                               plan, schedule):
+    """Feature-mode hybrid forward: (o, final moment carry), both
+    Dv-sharded; q/k and the g-moments replicated — the same
+    zero-collective partitioning as `_feature_fwd_launch` (the band's
+    denominator terms come entirely from the replicated q/k, so each
+    device's output slice is exact)."""
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels.hybrid_causal import hybrid_causal_pallas
+
+    ba, f = plan.batch, plan.feat
+    rep4 = P(ba, None, None, None)
+    interpret = kernel_ops.use_interpret()
+
+    def body(q, k, v):
+        sched, _ = _hybrid_sched(q, k, v, p, chunk_size, schedule)
+        return hybrid_causal_pallas(
+            q, k, v, p=p, window=window, denom_eps=denom_eps,
+            interpret=interpret, return_state=True,
+            **kernel_ops._causal_kwargs(sched, chunk_size))
+
+    return shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(rep4, rep4, P(ba, None, None, f)),
+        out_specs=(P(ba, None, None, f), _moment_specs(plan)),
+        check_rep=False,
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _hybrid_feature_trainable(q, k, v, p, window, chunk_size, denom_eps,
+                              plan, schedule):
+    # primal: the stateless fused launch (no carry DMA'd to HBM); only the
+    # vjp forward pays for state emission — it IS the residual
+    from repro.kernels import ops as kernel_ops
+
+    ba, f = plan.batch, plan.feat
+    rep4 = P(ba, None, None, None)
+
+    def body(q, k, v):
+        return kernel_ops.hybrid(q, k, v, p=p, window=window, causal=True,
+                                 chunk_size=chunk_size, denom_eps=denom_eps,
+                                 schedule=schedule)
+
+    return shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(rep4, rep4, P(ba, None, None, f)),
+        out_specs=P(ba, None, None, f),
+        check_rep=False,
+    )(q, k, v)
+
+
+def _hft_fwd(q, k, v, p, window, chunk_size, denom_eps, plan, schedule):
+    o, state = _hybrid_feature_fwd_launch(q, k, v, p, window, chunk_size,
+                                          denom_eps, plan, schedule)
+    if p < 2:
+        state = state[:2] + (None,) + state[3:]
+    return o, (q, k, v, tuple(state))
+
+
+def _hft_bwd(p, window, chunk_size, denom_eps, plan, schedule, res, do):
+    q, k, v, state = res
+    from repro.core import fastmax as _fm
+    from repro.core.hybrid import hybrid_bwd_scan
+
+    ba, f = plan.batch, plan.feat
+    rep4 = P(ba, None, None, None)
+    mspecs = _moment_specs(plan)
+    no_m2 = state[2] is None
+    if no_m2:
+        state, mspecs = state[:2] + state[3:], mspecs[:2] + mspecs[3:]
+
+    def body(q, k, v, do, *state):
+        import jax.numpy as jnp
+
+        if no_m2:
+            d, dvl = q.shape[-1], v.shape[-1]
+            m2 = jnp.zeros(k.shape[:2] + (d, d, dvl), state[0].dtype)
+            state = state[:2] + (m2,) + state[2:]
+        # the band-extended §2.5 reverse scan on the shard's Dv slice of
+        # (v, do, m-moments): every dq/dk term (band corrections included)
+        # is linear in the block-local output cotangent with an exact
+        # local denominator, so one psum per launch reassembles them
+        _, cs = _hybrid_sched(q, k, v, p, chunk_size, schedule)
+        dq, dk, dv = hybrid_bwd_scan(
+            q, k, v, _fm.Moments(*state), do, p=p, window=window,
+            chunk_size=cs, denom_eps=denom_eps)
+        dq = jax.lax.psum(dq, "model")
+        dk = jax.lax.psum(dk, "model")
+        return dq, dk, dv
+
+    return shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(rep4, rep4, P(ba, None, None, f), P(ba, None, None, f),
+                  *mspecs),
+        out_specs=(rep4, rep4, P(ba, None, None, f)),
+        check_rep=False,
+    )(q, k, v, do, *state)
+
+
+_hybrid_feature_trainable.defvjp(_hft_fwd, _hft_bwd)
+
+
+def hybrid_sharded(q, k, v, *, p: int, window: int, chunk_size: int,
+                   denom_eps: float, plan: ShardPlan, schedule=None):
+    """shard_map-wrapped TRAINABLE hybrid kernel attention (causal only).
+
+    heads mode: the fused hybrid launch runs shard-local per (batch,
+    kv-head) — autodiff of the shard_map applies the per-shard custom_vjp
+    (fused forward + jnp band-extended reverse scan), zero collectives.
+    feature mode: an explicit custom_vjp mirroring `_feature_trainable` —
+    forward emits the Dv-sharded outputs + moment carry collective-free,
+    backward runs the band-extended jnp reverse scan on each shard's
+    slice and psums the partial dq/dk once per launch.
+    """
+    if plan.mode == "heads":
+        from repro.kernels import ops as kernel_ops
+
+        ba, h = plan.batch, plan.head
+        qkv_spec = P(ba, h, None, None)
+
+        def body(q, k, v):
+            return kernel_ops.hybrid(q, k, v, p=p, window=window,
+                                     causal=True, chunk_size=chunk_size,
+                                     denom_eps=denom_eps, schedule=schedule)
+
+        return shard_map(
+            body, mesh=plan.mesh,
+            in_specs=(qkv_spec, qkv_spec, qkv_spec),
+            out_specs=P(ba, h, None, None),
+            check_rep=False,
+        )(q, k, v)
+    if plan.mode != "feature":
+        raise ValueError(
+            f"hybrid_sharded supports heads/feature modes, got "
+            f"{plan.mode!r}")
+    return _hybrid_feature_trainable(q, k, v, p, window, chunk_size,
+                                     denom_eps, plan, schedule)
 
 
 def fastmax_prefill_sharded(q, k, v, *, p: int, chunk_size: int,

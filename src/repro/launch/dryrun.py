@@ -91,7 +91,7 @@ def _kernel_cell_env(cfg):
     — the compiled HLO still proves the partitioning. An explicit
     REPRO_DECODE_KERNEL in the environment wins."""
     prev = os.environ.get("REPRO_DECODE_KERNEL")
-    if prev is None and cfg.attn.family == "fastmax" \
+    if prev is None and cfg.attn.family in ("fastmax", "hybrid") \
             and cfg.attn.impl == "kernel":
         os.environ["REPRO_DECODE_KERNEL"] = "1"
     try:

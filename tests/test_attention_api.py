@@ -62,7 +62,8 @@ def test_backend_names_cover_registry():
     """Every spec-reachable backend is registered, and vice versa."""
     reachable = {"softmax"} | {f"fastmax-{i}"
                                for i in ("oracle", "rowwise", "chunked",
-                                         "kernel")}
+                                         "kernel")} \
+        | {"hybrid-chunked", "hybrid-kernel"}
     assert set(list_backends()) == reachable
 
 

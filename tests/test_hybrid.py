@@ -1,0 +1,437 @@
+"""Hybrid near/far-field backend tier (`hybrid` marker; `make test-hybrid`).
+
+The load-bearing contracts:
+
+* the hybrid operator (exact banded softmax over the last `window` causal
+  positions + fastmax p=2 moments over everything older, ONE shared
+  normalizer) matches the composed dense oracle at f64 — forward AND
+  grads — for the chunked scan and the Pallas kernel (interpret mode);
+* the window edges degenerate correctly: w=0 is BITWISE fastmax, and
+  w >= N reproduces exact softmax over the normalized scores;
+* prefill + step decode is lockstep with the one-shot causal forward
+  (the decode state carries both legs: moments + a rolling W-slot
+  window cache), including resumable chunked prefill;
+* the serving engine produces exactly the tokens `generate()` produces
+  for hybrid-backed models, including slot reuse.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_qkv
+from repro.attention import (
+    AttentionSpec,
+    attention,
+    get_backend,
+    init_state,
+    prefill,
+    step,
+)
+from repro.core.hybrid import (
+    effective_window,
+    fastmax_causal_chunked,
+    hybrid_attention_ref,
+    hybrid_causal_chunked,
+)
+from repro.core.ref import normalize_qk, softmax_attention_ref
+
+jax.config.update("jax_enable_x64", True)
+
+pytestmark = pytest.mark.hybrid
+
+# (B, Hq, Hkv, N, D, Dv): MHA and GQA
+SHAPES = [(1, 2, 2, 33, 8, 8), (2, 4, 2, 29, 8, 8)]
+
+
+# ---------------------------------------------------------------------------
+# operator equivalence vs the composed dense oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", [1, 5, 16])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_chunked_matches_composed_oracle(shape, window):
+    rng = np.random.default_rng(hash((shape, window)) % 2**31)
+    q, k, v = make_qkv(rng, *shape, dtype=np.float64, normalized=True)
+    # chunk_size >= window: w_eff = min(window, C) stays the nominal window
+    ref = hybrid_attention_ref(q, k, v, window=window, normalize=False)
+    out = hybrid_causal_chunked(q, k, v, window=window, chunk_size=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_window_clamped_to_chunk_matches_clamped_oracle():
+    """window > chunk_size clamps to w_eff = chunk_size — the output equals
+    the oracle run at the CLAMPED window, not the nominal one."""
+    rng = np.random.default_rng(41)
+    q, k, v = make_qkv(rng, 1, 2, 2, 33, 8, 8, dtype=np.float64,
+                       normalized=True)
+    ref = hybrid_attention_ref(q, k, v, window=8, normalize=False)
+    out = hybrid_causal_chunked(q, k, v, window=16, chunk_size=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("window", [1, 7])
+def test_chunked_grads_match_composed_oracle(window):
+    rng = np.random.default_rng(5)
+    q, k, v = make_qkv(rng, 2, 4, 2, 29, 8, 8, dtype=np.float64,
+                       normalized=True)
+    cot = jnp.asarray(rng.normal(size=(2, 4, 29, 8)), jnp.float64)
+
+    def loss(fn):
+        return lambda q, k, v: jnp.sum(fn(q, k, v) * cot)
+
+    g_ref = jax.grad(loss(lambda q, k, v: hybrid_attention_ref(
+        q, k, v, window=window, normalize=False)), argnums=(0, 1, 2))(q, k, v)
+    g_out = jax.grad(loss(lambda q, k, v: hybrid_causal_chunked(
+        q, k, v, window=window, chunk_size=8)), argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", g_out, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-10, atol=1e-10, err_msg=name)
+
+
+@pytest.mark.parametrize("window", [1, 5, 16])
+def test_kernel_matches_composed_oracle(window):
+    from repro.kernels.hybrid_causal import hybrid_causal_pallas
+    rng = np.random.default_rng(hash(("kernel", window)) % 2**31)
+    q, k, v = make_qkv(rng, 1, 4, 2, 29, 8, 8, dtype=np.float64,
+                       normalized=True)
+    ref = hybrid_attention_ref(q, k, v, window=window, normalize=False)
+    out = hybrid_causal_pallas(q, k, v, window=window, chunk_size=16,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_kernel_trainable_grads_match_composed_oracle():
+    """The custom-VJP wrapper (Pallas forward, §2.5-style reverse scan
+    backward) must agree with the oracle's autodiff grads at f64."""
+    from repro.kernels import ops as kernel_ops
+    rng = np.random.default_rng(6)
+    q, k, v = make_qkv(rng, 1, 4, 2, 29, 8, 8, dtype=np.float64,
+                       normalized=True)
+    cot = jnp.asarray(rng.normal(size=(1, 4, 29, 8)), jnp.float64)
+    w = 7
+
+    g_ref = jax.grad(
+        lambda q, k, v: jnp.sum(hybrid_attention_ref(
+            q, k, v, window=w, normalize=False) * cot),
+        argnums=(0, 1, 2))(q, k, v)
+    g_out = jax.grad(
+        lambda q, k, v: jnp.sum(kernel_ops.hybrid(
+            q, k, v, window=w, chunk_size=8, interpret=True) * cot),
+        argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", g_out, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-10, atol=1e-10, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# window edges
+# ---------------------------------------------------------------------------
+
+
+def test_window_zero_is_bitwise_fastmax():
+    """w_eff = 0 must delegate to the fastmax scan with NO numeric drift —
+    the correction term is skipped entirely, not computed-and-masked."""
+    rng = np.random.default_rng(7)
+    q, k, v = make_qkv(rng, 1, 4, 2, 33, 8, 8, dtype=np.float32,
+                       normalized=True)
+    base = fastmax_causal_chunked(q, k, v, p=2, chunk_size=8)
+    out = hybrid_causal_chunked(q, k, v, window=0, chunk_size=8)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+
+
+def test_window_covers_sequence_is_exact_softmax():
+    """w_eff >= N leaves no far-field token: the output IS softmax over
+    the normalized scores (hq == hkv: the dense softmax reference is not
+    GQA-aware; scale=1.0: hybrid scores are plain q_hat . k_hat)."""
+    rng = np.random.default_rng(8)
+    n = 24
+    q, k, v = make_qkv(rng, 1, 2, 2, n, 8, 8, dtype=np.float64,
+                       normalized=True)
+    ref = softmax_attention_ref(q, k, v, causal=True, scale=1.0)
+    out = hybrid_causal_chunked(q, k, v, window=n, chunk_size=n,
+                                denom_eps=0.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_effective_window_clamps_to_chunk():
+    assert effective_window(64, 16) == 16
+    assert effective_window(5, 16) == 5
+    assert effective_window(-3, 16) == 0
+    assert effective_window(0, 16) == 0
+
+
+# ---------------------------------------------------------------------------
+# dispatcher + registry
+# ---------------------------------------------------------------------------
+
+
+def test_parse_hybrid_names():
+    s = AttentionSpec.parse("hybrid2-kernel")
+    assert (s.family, s.p, s.impl) == ("hybrid", 2, "kernel")
+    assert AttentionSpec.parse("hybrid").family == "hybrid"
+    assert AttentionSpec.parse("hybrid2-chunked").family == "hybrid"
+    with pytest.raises(ValueError):
+        AttentionSpec.parse("hybrid2-rowwise")
+
+
+def test_hybrid_backends_declare_capabilities():
+    ch = get_backend("hybrid-chunked")
+    ke = get_backend("hybrid-kernel")
+    assert ch.caps.decode and ke.caps.decode
+    assert not ch.caps.noncausal            # near-field band is causal-only
+    assert not ch.caps.decode_kernel and not ke.caps.decode_kernel
+    assert ke.fallback == "hybrid-chunked"
+
+
+@pytest.mark.parametrize("impl", ["chunked", "kernel"])
+def test_dispatcher_matches_ref(impl):
+    """attention() with a hybrid spec (normalization handled by the
+    backend) matches the dense reference on raw q/k."""
+    rng = np.random.default_rng(hash(impl) % 2**31)
+    q, k, v = make_qkv(rng, 2, 4, 2, 29, 8, 8, dtype=np.float64)
+    spec = AttentionSpec(family="hybrid", impl=impl, window=9, chunk_size=16)
+    ref = hybrid_attention_ref(q, k, v, window=9, normalize=True)
+    out = attention(q, k, v, spec, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_dispatcher_noncausal_hybrid_raises():
+    rng = np.random.default_rng(0)
+    q, k, v = make_qkv(rng, 1, 2, 2, 8, 4, 4, dtype=np.float32)
+    spec = AttentionSpec(family="hybrid", impl="chunked")
+    from repro.attention import UnsupportedCapabilityError
+    with pytest.raises(UnsupportedCapabilityError):
+        attention(q, k, v, spec, causal=False, strict=True)
+
+
+# ---------------------------------------------------------------------------
+# decode protocol: prefill + step lockstep with the one-shot forward
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", [0, 4, 64], ids=["w0", "w4", "wfull"])
+def test_prefill_then_step_lockstep(window):
+    """prefill(prompt) + step(token)* reproduces the one-shot causal
+    forward for every window regime (pure fastmax, banded, full band)."""
+    rng = np.random.default_rng(11)
+    b, hq, hkv, n, d = 2, 4, 2, 21, 8
+    q, k, v = make_qkv(rng, b, hq, hkv, n, d, d, dtype=np.float64)
+    spec = AttentionSpec(family="hybrid", impl="chunked", window=window,
+                         chunk_size=8)
+    full = attention(q, k, v, spec, causal=True)
+    st = init_state(spec, batch=b, n_kv_heads=hkv, q_head_dim=d,
+                    v_head_dim=d, max_len=n, dtype=jnp.float64)
+    pre = 13
+    o_pre, st = prefill(q[:, :, :pre], k[:, :, :pre], v[:, :, :pre], spec,
+                        state=st)
+    np.testing.assert_allclose(np.asarray(o_pre),
+                               np.asarray(full[:, :, :pre]),
+                               rtol=1e-10, atol=1e-10)
+    for t in range(pre, n):
+        o_t, st = step(st, q[:, :, t:t + 1], k[:, :, t:t + 1],
+                       v[:, :, t:t + 1], spec)
+        np.testing.assert_allclose(np.asarray(o_t[:, :, 0]),
+                                   np.asarray(full[:, :, t]),
+                                   rtol=1e-10, atol=1e-10)
+
+
+def test_decode_256_steps_lockstep():
+    """Long-horizon drift check: 256 decode steps after a 32-token prefill
+    stay lockstep with the one-shot forward (the rolling window cache and
+    the moment fold never disagree about which leg owns a token)."""
+    rng = np.random.default_rng(12)
+    b, h, d = 1, 2, 8
+    n, pre = 288, 32
+    q, k, v = make_qkv(rng, b, h, h, n, d, d, dtype=np.float64)
+    spec = AttentionSpec(family="hybrid", impl="chunked", window=8,
+                         chunk_size=16)
+    full = attention(q, k, v, spec, causal=True)
+    st = init_state(spec, batch=b, n_kv_heads=h, q_head_dim=d, v_head_dim=d,
+                    max_len=n, dtype=jnp.float64)
+    _, st = prefill(q[:, :, :pre], k[:, :, :pre], v[:, :, :pre], spec,
+                    state=st)
+
+    @jax.jit
+    def one(st, qkv):
+        qt, kt, vt = qkv
+        return step(st, qt, kt, vt, spec)
+
+    outs = []
+    for t in range(pre, n):
+        o_t, st = one(st, (q[:, :, t:t + 1], k[:, :, t:t + 1],
+                           v[:, :, t:t + 1]))
+        outs.append(o_t[:, :, 0])
+    got = jnp.stack(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full[:, :, pre:]),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_resumable_offset_prefill_matches_whole():
+    """Chunked (offset=...) prefill split at a chunk boundary matches the
+    whole-prompt call: the carried moments AND the carried window cache
+    seed the scan exactly."""
+    rng = np.random.default_rng(13)
+    b, hq, hkv, n, d = 2, 4, 2, 32, 8
+    q, k, v = make_qkv(rng, b, hq, hkv, n, d, d, dtype=np.float64)
+    spec = AttentionSpec(family="hybrid", impl="chunked", window=8,
+                         chunk_size=16)
+
+    def fresh():
+        return init_state(spec, batch=b, n_kv_heads=hkv, q_head_dim=d,
+                          v_head_dim=d, max_len=n, dtype=jnp.float64)
+
+    zero = jnp.asarray(0, jnp.int32)
+    o_full, st_full = prefill(q, k, v, spec, state=fresh(), offset=zero)
+    c = 16
+    st = fresh()
+    o1, st = prefill(q[:, :, :c], k[:, :, :c], v[:, :, :c], spec, state=st,
+                     offset=zero)
+    o2, st = prefill(q[:, :, c:], k[:, :, c:], v[:, :, c:], spec, state=st,
+                     offset=jnp.asarray(c, jnp.int32))
+    got = jnp.concatenate([o1, o2], axis=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(o_full),
+                               rtol=1e-12, atol=1e-12)
+    for name, a, ref in zip(st.moments._fields, st.moments, st_full.moments):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(ref),
+                                   rtol=1e-12, atol=1e-12, err_msg=name)
+    for name in ("k", "v", "mask"):
+        np.testing.assert_allclose(np.asarray(getattr(st.kv, name)),
+                                   np.asarray(getattr(st_full.kv, name)),
+                                   rtol=1e-12, atol=1e-12, err_msg=name)
+    # and a later decode step sees identical state
+    q1, k1, v1 = make_qkv(rng, b, hq, hkv, 1, d, d, dtype=np.float64)
+    o_a, _ = step(st, q1, k1, v1, spec)
+    o_b, _ = step(st_full, q1, k1, v1, spec)
+    np.testing.assert_allclose(np.asarray(o_a), np.asarray(o_b),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_window_zero_state_has_no_kv_leg():
+    spec = AttentionSpec(family="hybrid", impl="chunked", window=0)
+    st = init_state(spec, batch=1, n_kv_heads=2, q_head_dim=4, v_head_dim=4,
+                    max_len=8)
+    assert st.kv is None and st.moments is not None
+
+
+# ---------------------------------------------------------------------------
+# serving engine parity (slot-indexed hybrid state: moments + window cache)
+# ---------------------------------------------------------------------------
+
+
+def _serve_setup(spec_name):
+    from repro.configs import get_smoke_config
+    from repro.models import init_model
+    cfg = get_smoke_config("qwen3-1.7b")
+    cfg = dataclasses.replace(cfg, attn=AttentionSpec.parse(spec_name))
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _serve_ref(params, cfg, prompt, gen, max_len):
+    from repro.launch.serve import generate
+    return np.asarray(generate(params, cfg, jnp.asarray(prompt[None]), gen,
+                               max_len=max_len))[0]
+
+
+def test_engine_parity_hybrid():
+    """Staggered admissions + ragged prompts through the engine produce
+    exactly the tokens generate() produces with the hybrid backend (the
+    slot pool must scatter/gather BOTH state legs)."""
+    from repro.serve import ServeEngine
+    cfg, params = _serve_setup("hybrid2-chunked")
+    rng = np.random.default_rng(21)
+    p0 = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+    p1 = rng.integers(0, cfg.vocab_size, 23).astype(np.int32)
+    G = 6
+    ref0 = _serve_ref(params, cfg, p0, G, 64)
+    ref1 = _serve_ref(params, cfg, p1, G, 64)
+    eng = ServeEngine(params, cfg, max_slots=2, max_len=64)
+    r0 = eng.submit(p0, G)
+    outs = {}
+    for _ in range(3):
+        for f in eng.step():
+            outs[f.rid] = f.tokens
+    r1 = eng.submit(p1, G)
+    outs.update(eng.run())
+    np.testing.assert_array_equal(outs[r0], ref0)
+    np.testing.assert_array_equal(outs[r1], ref1)
+
+
+def test_engine_slot_reuse_hybrid():
+    """max_slots=1 serving 3 queued hybrid requests: each admit must fully
+    overwrite the evicted slot's window cache AND moments — stale band
+    tokens from the previous tenant must not leak into the next."""
+    from repro.serve import ServeEngine
+    cfg, params = _serve_setup("hybrid2-chunked")
+    rng = np.random.default_rng(22)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (19, 40, 8)]
+    G = 4
+    refs = [_serve_ref(params, cfg, p, G, 64) for p in prompts]
+    eng = ServeEngine(params, cfg, max_slots=1, max_len=64)
+    rids = [eng.submit(p, G) for p in prompts]
+    outs = eng.run()
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(outs[rid], ref)
+
+
+# ---------------------------------------------------------------------------
+# sharded execution (skips without REPRO_TEST_DEVICES=8)
+# ---------------------------------------------------------------------------
+
+
+# (mesh shape, hkv, hq) per partitioning mode — same matrix as
+# test_shard_map.py: heads needs Hkv % tp == 0, feature exercises GQA kv
+# heads that do NOT divide the model axis
+_SHARD_MODES = {
+    "heads": dict(mesh=(2, 4), hkv=4, hq=8),
+    "feature": dict(mesh=(2, 4), hkv=2, hq=4),
+}
+
+
+@pytest.mark.parametrize("mode", sorted(_SHARD_MODES))
+def test_hybrid_sharded_matches_single_device(shard_devices, mode):
+    """hybrid_sharded heads/feature modes (fwd + grads) match the
+    single-device chunked scan on 8 forced host devices."""
+    from repro.kernels.sharded import hybrid_sharded, plan_kernel_sharding
+    from repro.launch.mesh import make_test_mesh
+    cfgm = _SHARD_MODES[mode]
+    rng = np.random.default_rng(31)
+    b, n, d, dv = 2, 32, 4, 8
+    q, k, v = make_qkv(rng, b, cfgm["hq"], cfgm["hkv"], n, d, dv,
+                       dtype=np.float64, normalized=True)
+    w, cs = 8, 16
+    cot = jnp.asarray(rng.normal(size=(b, cfgm["hq"], n, dv)), jnp.float64)
+
+    o_ref = hybrid_causal_chunked(q, k, v, window=w, chunk_size=cs)
+    g_ref = jax.grad(
+        lambda q, k, v: jnp.sum(hybrid_causal_chunked(
+            q, k, v, window=w, chunk_size=cs) * cot),
+        argnums=(0, 1, 2))(q, k, v)
+
+    mesh = make_test_mesh(cfgm["mesh"], ("data", "model"))
+    with mesh:
+        plan = plan_kernel_sharding(mesh, batch=b, hq=cfgm["hq"],
+                                    hkv=cfgm["hkv"], dv=dv)
+        assert plan is not None and plan.mode == mode, plan
+        o_sh = hybrid_sharded(q, k, v, p=2, window=w, chunk_size=cs,
+                              denom_eps=1e-6, plan=plan)
+        g_sh = jax.grad(
+            lambda q, k, v: jnp.sum(hybrid_sharded(
+                q, k, v, p=2, window=w, chunk_size=cs, denom_eps=1e-6,
+                plan=plan) * cot),
+            argnums=(0, 1, 2))(q, k, v)
+    np.testing.assert_allclose(np.asarray(o_sh), np.asarray(o_ref),
+                               rtol=1e-10, atol=1e-10)
+    for name, a, b_ in zip("qkv", g_sh, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-9, atol=1e-9, err_msg=name)
